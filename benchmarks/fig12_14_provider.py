@@ -1,0 +1,62 @@
+"""Paper Figs 12-14: resource-provider metrics across systems.
+
+Fig 12 — total resource consumption (node*hours, consolidated),
+Fig 13 — peak resource consumption (nodes per hour),
+Fig 14 — accumulated size of node adjustments + the management overhead
+they imply at the measured 15.743 s per adjusted node (§4.5.4).
+"""
+from __future__ import annotations
+
+from benchmarks.emulation import run_all
+
+PAPER = {
+    # ratios the paper reports for the provider
+    "total_saving_vs_dcs": 0.297,
+    "total_saving_vs_drp": 0.290,
+    "peak_vs_dcs": 1.06,
+    "peak_vs_drp": 0.21,
+    "overhead_s_per_hour": 341.0,
+}
+
+
+def provider_metrics(policy_set: str = "tuned"):
+    results = run_all(policy_set)
+    rows = {}
+    for system, res in results.items():
+        rows[system] = {
+            "total_node_hours": round(res.total_node_hours),
+            "peak_nodes_per_hour": res.peak_nodes_per_hour,
+            "adjust_count": res.adjust_count,
+            "overhead_s_per_hour": round(res.overhead_s_per_hour, 1),
+        }
+    dc, dcs, drp = rows["dawningcloud"], rows["dcs"], rows["drp"]
+    derived = {
+        "total_saving_vs_dcs": round(
+            1 - dc["total_node_hours"] / dcs["total_node_hours"], 3),
+        "total_saving_vs_drp": round(
+            1 - dc["total_node_hours"] / drp["total_node_hours"], 3),
+        "peak_vs_dcs": round(
+            dc["peak_nodes_per_hour"] / dcs["peak_nodes_per_hour"], 2),
+        "peak_vs_drp": round(
+            dc["peak_nodes_per_hour"] / drp["peak_nodes_per_hour"], 2),
+        "overhead_s_per_hour": dc["overhead_s_per_hour"],
+    }
+    return rows, derived
+
+
+def main():
+    rows, derived = provider_metrics()
+    print("== Figs 12-14 (resource provider) ==")
+    print(f"{'system':14s} {'total n*h':>10s} {'peak/h':>7s} "
+          f"{'adjusts':>8s} {'ovh s/h':>8s}")
+    for system, r in rows.items():
+        print(f"{system:14s} {r['total_node_hours']:>10} "
+              f"{r['peak_nodes_per_hour']:>7} {r['adjust_count']:>8} "
+              f"{r['overhead_s_per_hour']:>8}")
+    print("\nderived (ours vs paper):")
+    for k, v in derived.items():
+        print(f"  {k:24s} ours={v:<8} paper={PAPER[k]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Roofline analysis per (arch x shape x mesh) from the dry-run artifacts.
+
+Three terms, each "seconds if that resource were the only limit":
+
+  compute    EXEC_FLOPS / (chips * 197e12 bf16 FLOP/s)
+  memory     HBM_BYTES  / (chips * 819e9 B/s)
+  collective wire_bytes_per_chip / link budget
+
+EXEC_FLOPS / HBM_BYTES come from the analytic model in benchmarks/flops.py
+(cost_analysis counts while bodies once — the artifact keeps the raw value
+and trip counts as a cross-check). Collective bytes come from the compiled
+HLO's collective ops, trip-scaled (exact nesting known per op).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM. ICI: ~50
+GB/s/link; on the 2D intra-pod torus a ring reduction streams over one
+link direction at a time, so the per-chip collective budget is 50 GB/s
+(conservative single-link model; documented). Cross-pod (DCI) budget is
+taken as 10 GB/s/chip — an assumption, flagged in EXPERIMENTS.md.
+
+The dominant term is the bottleneck; MODEL_FLOPS/EXEC_FLOPS exposes
+remat/causal/capacity waste. Roofline fraction = compute / max(all terms):
+the share of peak MXU throughput this cell could reach if perfectly
+overlapped.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.flops import cell_model
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.configs.base import ParallelConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / chip, intra-pod (single-link ring model)
+DCI_BW = 10e9                # B/s / chip, cross-pod (assumption)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_artifacts(mesh: str = "pod") -> list[dict]:
+    arts = []
+    if not os.path.isdir(ART_DIR):
+        return arts
+    for name in sorted(os.listdir(ART_DIR)):
+        if name.endswith(f"__{mesh}.json"):
+            with open(os.path.join(ART_DIR, name)) as f:
+                arts.append(json.load(f))
+    return arts
+
+
+def roofline_row(art: dict) -> dict | None:
+    if art.get("status") != "ok":
+        return {"arch": art["arch"], "shape": art["shape"],
+                "status": art.get("status"),
+                "note": art.get("reason", art.get("error", ""))[:70]}
+    cfg = get_config(art["arch"])
+    shape = SHAPES[art["shape"]]
+    parallel = ParallelConfig(**{
+        k: v for k, v in art["parallel"].items()
+        if k in ParallelConfig.__dataclass_fields__})
+    chips = art["n_devices"]
+    m = cell_model(cfg, shape, parallel)
+    compute_s = m.exec_flops / (chips * PEAK_FLOPS)
+    memory_s = m.hbm_bytes / (chips * HBM_BW)
+    coll = art["collectives"]
+    # _tpu variants halve f32 reduction collectives (XLA:CPU materializes
+    # f32 dot partials; TPU reduces in bf16) — use them when present
+    wire_intra = coll.get("wire_bytes_intra_pod_tpu",
+                          coll["wire_bytes_intra_pod"])
+    wire_cross = coll.get("wire_bytes_cross_pod_tpu",
+                          coll["wire_bytes_cross_pod"])
+    collective_s = wire_intra / ICI_BW + wire_cross / DCI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        "arch": art["arch"], "shape": art["shape"], "status": "ok",
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "roofline_fraction": compute_s / bound if bound else 0.0,
+        "model_flops": m.model_flops,
+        "exec_flops": m.exec_flops,
+        "useful_ratio": m.model_flops / m.exec_flops if m.exec_flops else 0.0,
+        "temp_gib": art["memory"]["temp_bytes"] / 2**30,
+        "args_gib": art["memory"]["argument_bytes"] / 2**30,
+        "fits_hbm": (art["memory"]["temp_bytes"]
+                     + art["memory"]["argument_bytes"]) < 16 * 2**30,
+        "hlo_flops_raw": art["cost"]["flops"],
+        "wire_intra_gib": wire_intra / 2**30,
+        "wire_cross_gib": wire_cross / 2**30,
+    }
+
+
+def table(mesh: str = "pod") -> list[dict]:
+    return [r for a in load_artifacts(mesh) if (r := roofline_row(a))]
+
+
+def main():
+    for mesh in ("pod", "multipod"):
+        rows = table(mesh)
+        if not rows:
+            print(f"(no {mesh} artifacts — run python -m repro.launch.dryrun)")
+            continue
+        print(f"\n== Roofline ({mesh}) ==")
+        print(f"{'arch':22s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} "
+              f"{'coll_s':>9s} {'dom':>5s} {'roof%':>6s} {'useful':>7s} "
+              f"{'fits':>5s}")
+        for r in rows:
+            if r.get("status") != "ok":
+                print(f"{r['arch']:22s} {r['shape']:12s} -- {r['status']}: "
+                      f"{r.get('note', '')}")
+                continue
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']:9.4f} "
+                  f"{r['memory_s']:9.4f} {r['collective_s']:9.4f} "
+                  f"{r['dominant'][:4]:>5s} {r['roofline_fraction']:6.1%} "
+                  f"{r['useful_ratio']:7.2f} "
+                  f"{'y' if r['fits_hbm'] else 'N':>5s}")
+
+
+if __name__ == "__main__":
+    main()

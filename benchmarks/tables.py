@@ -1,0 +1,63 @@
+"""Paper Tables 2-4: per-service-provider metrics for each system.
+
+Table 2 — NASA iPSC trace (HTC), Table 3 — SDSC BLUE trace (HTC),
+Table 4 — Montage workflow (MTC). Each row: performance metric (completed
+jobs / tasks-per-second), resource consumption (node*hours) and saved
+resources vs the DCS baseline, printed next to the paper's values.
+"""
+from __future__ import annotations
+
+from benchmarks.emulation import (
+    PAPER_PERF, PAPER_TABLES, run_all, saved_vs_dcs,
+)
+
+
+def _table(workload: str, perf_key: str, policy_set: str) -> list[dict]:
+    results = run_all(policy_set)
+    rows = []
+    for system in ("dcs", "ssp", "drp", "dawningcloud"):
+        r = results[system].per_workload[workload]
+        perf = (r.completed_in_window if perf_key == "jobs"
+                else round(r.tasks_per_second, 2))
+        rows.append({
+            "system": system,
+            "performance": perf,
+            "paper_performance": PAPER_PERF[system][workload],
+            "node_hours": round(r.node_hours),
+            "paper_node_hours": PAPER_TABLES[system][workload],
+            "saved_vs_dcs": round(saved_vs_dcs(results, system, workload), 3),
+            "paper_saved_vs_dcs": round(
+                1 - PAPER_TABLES[system][workload]
+                / PAPER_TABLES["dcs"][workload], 3),
+        })
+    return rows
+
+
+def table2_nasa(policy_set: str = "tuned"):
+    return _table("nasa", "jobs", policy_set)
+
+
+def table3_blue(policy_set: str = "tuned"):
+    return _table("blue", "jobs", policy_set)
+
+
+def table4_montage(policy_set: str = "tuned"):
+    return _table("montage", "tps", policy_set)
+
+
+def main():
+    for name, fn in (("Table 2 (NASA)", table2_nasa),
+                     ("Table 3 (BLUE)", table3_blue),
+                     ("Table 4 (Montage)", table4_montage)):
+        print(f"\n== {name} ==")
+        print(f"{'system':14s} {'perf':>8s} {'paper':>8s} {'node*h':>8s} "
+              f"{'paper':>8s} {'saved':>7s} {'paper':>7s}")
+        for row in fn():
+            print(f"{row['system']:14s} {row['performance']:>8} "
+                  f"{row['paper_performance']:>8} {row['node_hours']:>8} "
+                  f"{row['paper_node_hours']:>8} "
+                  f"{row['saved_vs_dcs']:>7.1%} {row['paper_saved_vs_dcs']:>7.1%}")
+
+
+if __name__ == "__main__":
+    main()

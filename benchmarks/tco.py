@@ -1,0 +1,49 @@
+"""Paper §4.5.5: total cost of ownership, DCS vs SSP (EC2 pricing).
+
+Reproduces the arithmetic of the paper's real case exactly:
+  DCS — 15-node cluster, $120,000 CapEx over an 8-year depreciation cycle,
+        $30,000 total maintenance over the cycle, $1,600/month energy+space.
+  SSP — 30 EC2 instances at $0.1/instance-hour (matching the DCS compute),
+        <=1,000 GB/month inbound at $0.1/GB.
+"""
+from __future__ import annotations
+
+DCS_CAPEX = 120_000.0
+DCS_DEPRECIATION_YEARS = 8
+DCS_MAINTENANCE_TOTAL = 30_000.0
+DCS_ENERGY_SPACE_MONTH = 1_600.0
+
+EC2_INSTANCES = 30
+EC2_PRICE_HOUR = 0.1
+EC2_INBOUND_GB = 1_000
+EC2_INBOUND_PRICE_GB = 0.1
+
+PAPER_TCO_DCS = 3_160.0
+PAPER_TCO_SSP = 2_260.0
+
+
+def tco_dcs_per_month() -> float:
+    months = DCS_DEPRECIATION_YEARS * 12
+    return (DCS_CAPEX / months + DCS_MAINTENANCE_TOTAL / months
+            + DCS_ENERGY_SPACE_MONTH)
+
+
+def tco_ssp_per_month() -> float:
+    instances = 30 * 24 * EC2_INSTANCES * EC2_PRICE_HOUR
+    inbound = EC2_INBOUND_GB * EC2_INBOUND_PRICE_GB
+    return instances + inbound
+
+
+def main():
+    dcs = tco_dcs_per_month()
+    ssp = tco_ssp_per_month()
+    print("== TCO (paper 4.5.5) ==")
+    print(f"DCS: ${dcs:,.0f}/month (paper ${PAPER_TCO_DCS:,.0f})")
+    print(f"SSP: ${ssp:,.0f}/month (paper ${PAPER_TCO_SSP:,.0f})")
+    print(f"SSP/DCS = {ssp/dcs:.1%} (paper 71.5%)")
+    assert abs(dcs - PAPER_TCO_DCS) < 5.0, dcs
+    assert abs(ssp - PAPER_TCO_SSP) < 5.0, ssp
+
+
+if __name__ == "__main__":
+    main()

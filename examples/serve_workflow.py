@@ -1,0 +1,67 @@
+"""MTC serving: a Montage-shaped DAG of inference tasks through the
+continuous-batching engine — the MTC TRE's trigger monitor feeds the
+engine only tasks whose dependencies completed.
+
+  PYTHONPATH=src python examples/serve_workflow.py
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ParallelConfig
+from repro.models.lm import LM
+from repro.serve.engine import Engine, Request
+from repro.sim.traces import montage_like
+
+
+def main():
+    cfg = get_smoke_config("musicgen-large")
+    lm = LM(cfg)
+    rt = lm.runtime(ParallelConfig(attn_q_chunk=16, attn_kv_chunk=16))
+    params = lm.init(jax.random.key(0))[0]
+    engine = Engine(lm, params, rt, max_batch=4, max_len=48)
+
+    # a small Montage-shaped workflow: each task = one generation request
+    wl = montage_like(n_project=6)
+    tasks = {j.jid: j for j in wl.jobs[:40]}
+    children: dict[int, list[int]] = {}
+    ndeps = {}
+    for j in tasks.values():
+        deps = [d for d in j.deps if d in tasks]
+        ndeps[j.jid] = len(deps)
+        for d in deps:
+            children.setdefault(d, []).append(j.jid)
+    ready = [jid for jid, n in ndeps.items() if n == 0]
+    rng = np.random.default_rng(0)
+    done_order = []
+    # trigger monitor loop: admit ready tasks, decode, release dependents
+    pending: list[int] = list(ready)
+    while pending or engine.active:
+        while pending and engine.free:
+            jid = pending.pop(0)
+            toks = rng.integers(1, cfg.vocab_size,
+                                (6, cfg.n_codebooks)).astype(np.int32)
+            engine.admit(Request(rid=jid, tokens=toks, max_new_tokens=4))
+        for req in engine.step():
+            done_order.append(req.rid)
+            for c in children.get(req.rid, ()):
+                ndeps[c] -= 1
+                if ndeps[c] == 0:
+                    pending.append(c)
+    assert len(done_order) == len(tasks), (len(done_order), len(tasks))
+    # dependencies respected in completion order
+    pos = {jid: i for i, jid in enumerate(done_order)}
+    for j in tasks.values():
+        for d in j.deps:
+            if d in tasks:
+                assert pos[d] < pos[j.jid]
+    print(f"served {len(done_order)} workflow tasks in {engine.steps} decode "
+          f"steps (continuous batching, max_batch=4)")
+    print("dependency order respected; MTC TRE trigger-monitor OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, ParallelConfig, RunConfig, ShapeConfig, SHAPES, smoke_reduce,
+)
+from repro.configs.registry import ARCHS, get_config, get_smoke_config  # noqa: F401

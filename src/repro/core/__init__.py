@@ -1,0 +1,13 @@
+"""The paper's contribution: the Dynamic Service Provision (DSP) model.
+
+- ``types``      Job / Workload — the unit of MTC/HTC work
+- ``policy``     resource-management policies (B, R, DR1/DR2 semantics)
+- ``provision``  grant-or-reject provision service + lease billing
+- ``lifecycle``  TRE state machine (CSF lifecycle management service)
+- ``scheduling`` first-fit (HTC) and FCFS (MTC) job schedulers
+- ``controller`` bridges DSP decisions to live elastic JAX training jobs
+"""
+from repro.core.lifecycle import LifecycleService, TREState  # noqa: F401
+from repro.core.policy import MgmtPolicy, PolicyEngine  # noqa: F401
+from repro.core.provision import ProvisionService  # noqa: F401
+from repro.core.types import Job, Workload  # noqa: F401

@@ -1,0 +1,181 @@
+"""Live elastic controller: DSP policies driving real JAX training jobs.
+
+This is the bridge between the paper's resource-management layer and the
+training substrate. An ``ElasticController`` is the *server* of an HTC TRE
+whose jobs are JAX training runs:
+
+  - queued tasks are scheduled first-fit onto the TRE's device allocation,
+  - the same ``PolicyEngine`` used by the emulator scans the queue and
+    negotiates node grants/releases with the ``ProvisionService``
+    (1 node = 1 accelerator here; on the production pod, 1 node = 8 chips),
+  - a *running* job can be elastically resized: the controller checkpoints,
+    rebuilds the mesh with a new ``data``-axis extent, re-places the state
+    (checkpoints are sharding-agnostic) and resumes,
+  - injected preemptions are absorbed by restart-from-latest-checkpoint.
+
+Control runs in *steps* rather than wall seconds: one control tick =
+``steps_per_tick`` optimizer steps of every running job (the emulator owns
+wall-clock semantics; the live controller owns real work).
+"""
+from __future__ import annotations
+
+import math
+import os
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.core.policy import MgmtPolicy, PolicyEngine
+from repro.core.provision import ProvisionService
+from repro.core.scheduling import first_fit
+from repro.data.synthetic import synthetic_batches
+from repro.models.lm import LM
+from repro.train import checkpoint as ckpt
+from repro.train.train_step import build_train_step
+
+
+@dataclass
+class TrainTask:
+    """One HTC job: train ``rcfg`` for ``num_steps`` on ``nodes`` devices."""
+    name: str
+    rcfg: RunConfig
+    nodes: int
+    num_steps: int
+    ckpt_dir: str
+    # ---- runtime state ----
+    steps_done: int = 0
+    alloc: int = 0                    # devices currently assigned
+    losses: list = field(default_factory=list)
+    resizes: int = 0
+    restarts: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.steps_done >= self.num_steps
+
+
+class ElasticController:
+    def __init__(self, *, policy: MgmtPolicy, provision: ProvisionService,
+                 tre_name: str = "train-tre", devices=None,
+                 steps_per_tick: int = 10, ticks_per_release: int = 5,
+                 elastic_grow: bool = True):
+        self.policy_engine = PolicyEngine(policy)
+        self.provision = provision
+        self.name = tre_name
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.steps_per_tick = steps_per_tick
+        self.ticks_per_release = ticks_per_release
+        self.elastic_grow = elastic_grow
+        self.queue: list[TrainTask] = []
+        self.running: list[TrainTask] = []
+        self.finished: list[TrainTask] = []
+        self.owned = policy.initial
+        ok = provision.request(tre_name, policy.initial, 0.0)
+        assert ok, "initial resources rejected"
+        self._tick = 0
+        self._idle_acc = 0.0
+
+    # ----------------------------------------------------------- plumbing
+    @property
+    def busy(self) -> int:
+        return sum(t.alloc for t in self.running)
+
+    @property
+    def free(self) -> int:
+        return self.owned - self.busy
+
+    def submit(self, task: TrainTask) -> None:
+        self.queue.append(task)
+
+    def _mesh_for(self, n: int):
+        if n <= 1:
+            return None
+        assert n <= len(self.devices), (n, len(self.devices))
+        from jax.sharding import Mesh
+        from repro.parallel.sharding import AXIS_DATA
+        return Mesh(np.array(self.devices[:n]), (AXIS_DATA,))
+
+    # ------------------------------------------------------------- a tick
+    def _run_segment(self, task: TrainTask, fail: bool = False) -> None:
+        """Run ``steps_per_tick`` steps of a task under its current mesh."""
+        mesh = self._mesh_for(task.alloc)
+        lm = LM(task.rcfg.model)
+        step_fn, rt, opt = build_train_step(lm, task.rcfg, mesh)
+        jit_step = jax.jit(step_fn, donate_argnums=(0,))
+        start = ckpt.latest_step(task.ckpt_dir)
+        if start is None:
+            params = jax.jit(lambda k: lm.init(k)[0])(
+                jax.random.key(task.rcfg.seed))
+            state = opt.init(params)
+            start = 0
+        else:
+            abs_state = opt.init_abstract(lm.init(None, abstract=True)[0])
+            state, start = ckpt.restore(task.ckpt_dir, abs_state)
+        batch_fn = synthetic_batches(task.rcfg, mesh)
+        end = min(start + self.steps_per_tick, task.num_steps)
+        for step in range(start, end):
+            if fail and step == start + 1:
+                task.restarts += 1
+                return  # simulated preemption: resume from last checkpoint
+            state, metrics = jit_step(state, batch_fn(step))
+            task.losses.append(float(metrics["loss"]))
+        ckpt.save(task.ckpt_dir, end, state)
+        task.steps_done = end
+
+    def tick(self, *, fail_task: str | None = None) -> None:
+        """One control cycle: schedule -> train -> negotiate resources."""
+        self._tick += 1
+        # 1) DSP scan: the queue's demand may call for more resources
+        req = self.policy_engine.scan([t.nodes for t in self.queue], self.owned)
+        if req > 0:
+            cap = len(self.devices) - self.owned
+            req = min(req, cap)
+            if req > 0 and self.provision.request(self.name, req, self._tick):
+                self.policy_engine.granted(req)
+                self.owned += req
+        # 2) first-fit schedule queued tasks onto free devices
+        for task in first_fit(self.queue, self.free):
+            self.queue.remove(task)
+            task.alloc = task.nodes
+            self.running.append(task)
+        # 3) beyond-paper: grow a running job into spare devices (2x max)
+        if self.elastic_grow:
+            for task in self.running:
+                grow = task.alloc
+                if self.free >= grow and task.alloc < 2 * task.nodes:
+                    task.alloc += grow
+                    task.resizes += 1
+        # 4) run one segment of every running job
+        for task in list(self.running):
+            self._run_segment(task, fail=(task.name == fail_task))
+            if task.done:
+                self.running.remove(task)
+                self.finished.append(task)
+                task.alloc = 0
+        # 5) shrink grown jobs back when the queue needs their devices
+        if self.queue:
+            for task in self.running:
+                if task.alloc > task.nodes:
+                    task.alloc = task.nodes
+                    task.resizes += 1
+        # 6) hourly-analogue release check on averaged idle
+        self._idle_acc += self.free
+        if self._tick % self.ticks_per_release == 0:
+            idle_avg = self._idle_acc / self.ticks_per_release
+            rel = self.policy_engine.release_check(
+                int(min(idle_avg, self.free)))
+            if rel > 0:
+                self.provision.release(self.name, rel, self._tick)
+                self.owned -= rel
+            self._idle_acc = 0.0
+
+    def run(self, *, max_ticks: int = 1000, fail_at: dict | None = None) -> None:
+        fail_at = dict(fail_at or {})
+        while (self.queue or self.running) and self._tick < max_ticks:
+            self.tick(fail_task=fail_at.pop(self._tick + 1, None))
+
+    def destroy(self) -> None:
+        self.provision.destroy(self.name, self._tick)
+        self.owned = 0

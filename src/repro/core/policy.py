@@ -1,0 +1,103 @@
+"""DSP resource-management & provision policies (paper §3.2.2).
+
+``PolicyEngine`` is *pure decision logic*: given queue state it returns how
+many nodes to request; given idle state it returns how many to release. The
+same engine instance drives (a) the discrete-event emulator
+(``repro.sim.systems``) and (b) the live elastic JAX controller
+(``repro.core.controller``) — one implementation, two drivers, which is what
+makes the reproduction a framework rather than a simulator.
+
+Paper semantics implemented here:
+
+HTC (§3.2.2.1): initial resources ``B`` are never released; the server scans
+the queue every 60 s; with *ratio of obtaining resources* =
+(accumulated demand of queued jobs) / (currently owned):
+  - ratio > R           -> request DR1 = demand - owned
+  - biggest job > owned -> request DR2 = biggest - owned   (when ratio <= R)
+Each granted block registers an hourly idle-check; a block is released when
+idle resources cover its size.
+
+MTC (§3.2.2.2): identical, but the scan period is 3 s (tasks run in seconds)
+and every queued workflow-constituent job counts toward the demand.
+
+Provision policy (§3.2.2.3): grant if available else reject; releases are
+passively reclaimed. Implemented by ``repro.core.provision``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+HTC_SCAN_S = 60.0
+MTC_SCAN_S = 3.0
+RELEASE_CHECK_S = 3600.0
+
+
+@dataclass(frozen=True)
+class MgmtPolicy:
+    """A service provider's resource-management policy (B, R)."""
+    initial: int                 # B: initial resources (never reclaimed)
+    ratio: float                 # R: threshold ratio of obtaining resources
+    scan_interval: float         # 60 s (HTC) / 3 s (MTC)
+    release_interval: float = RELEASE_CHECK_S
+
+    @staticmethod
+    def htc(B: int, R: float) -> "MgmtPolicy":
+        return MgmtPolicy(B, R, HTC_SCAN_S)
+
+    @staticmethod
+    def mtc(B: int, R: float) -> "MgmtPolicy":
+        return MgmtPolicy(B, R, MTC_SCAN_S)
+
+
+class PolicyEngine:
+    """Stateful wrapper tracking outstanding dynamic blocks (DR1/DR2)."""
+
+    def __init__(self, policy: MgmtPolicy):
+        self.policy = policy
+        self.dynamic_blocks: list[int] = []
+
+    # ------------------------------------------------------------- scan
+    def scan(self, queued_demands: Sequence[int], owned: int) -> int:
+        """Nodes to request right now (0 = no action).
+
+        queued_demands: per-job node demands of everything in the queue.
+        """
+        if not queued_demands:
+            return 0
+        demand = sum(queued_demands)
+        biggest = max(queued_demands)
+        owned = max(owned, 1)
+        ratio = demand / owned
+        if ratio > self.policy.ratio and demand > owned:
+            return demand - owned            # DR1
+        if biggest > owned:
+            return biggest - owned           # DR2
+        return 0
+
+    def granted(self, n: int) -> None:
+        if n > 0:
+            self.dynamic_blocks.append(n)
+
+    @property
+    def dynamic_total(self) -> int:
+        return sum(self.dynamic_blocks)
+
+    # ---------------------------------------------------------- release
+    def release_check(self, idle: int) -> int:
+        """Hourly idle check: release every dynamic block covered by idle
+        resources (biggest blocks first). Returns total nodes to release."""
+        released = 0
+        keep: list[int] = []
+        for blk in sorted(self.dynamic_blocks, reverse=True):
+            if idle - released >= blk:
+                released += blk
+            else:
+                keep.append(blk)
+        self.dynamic_blocks = keep
+        return released
+
+    def release_all(self) -> int:
+        n = self.dynamic_total
+        self.dynamic_blocks = []
+        return n

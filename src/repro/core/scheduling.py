@@ -1,0 +1,42 @@
+"""Job scheduling policies (paper §4.4(1)).
+
+``first_fit``  — HTC: scan all queued jobs in arrival order and start every
+                 job whose node demand fits the currently free nodes.
+``fcfs``       — MTC: strict first-come-first-served over *ready* tasks
+                 (dependencies satisfied); head-of-line blocks the queue.
+
+Both return the list of jobs to start now; the caller removes them from the
+queue and commits the nodes.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.types import Job
+
+
+def first_fit(queue: Sequence[Job], free: int) -> list[Job]:
+    started: list[Job] = []
+    for job in queue:
+        if job.nodes <= free:
+            started.append(job)
+            free -= job.nodes
+    return started
+
+
+def fcfs(queue: Sequence[Job], free: int) -> list[Job]:
+    started: list[Job] = []
+    for job in queue:
+        if job.nodes > free:
+            break
+        started.append(job)
+        free -= job.nodes
+    return started
+
+
+SCHEDULERS = {"first_fit": first_fit, "fcfs": fcfs}
+
+
+def scheduler_for(kind: str):
+    """HTC -> first-fit; MTC -> FCFS (paper §4.4)."""
+    return first_fit if kind == "htc" else fcfs

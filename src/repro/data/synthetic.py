@@ -1,0 +1,109 @@
+"""Deterministic synthetic token pipeline + abstract input specs.
+
+``input_specs(model, shape)`` is the single source of truth for what a step
+consumes — the dry-run lowers against these ShapeDtypeStructs and the
+synthetic pipeline materializes matching concrete batches for smoke tests
+and end-to-end examples (with the MusicGen delay pattern applied to
+codebook streams, and stub patch embeddings for the VLM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+
+
+def _token_shape(cfg: ModelConfig, B: int, S: int) -> tuple:
+    if cfg.n_codebooks > 1:
+        return (B, S, cfg.n_codebooks)
+    return (B, S)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    S_txt = S - cfg.n_patches if cfg.vision_stub else S
+    i32 = jnp.int32
+    specs = {
+        "tokens": jax.ShapeDtypeStruct(_token_shape(cfg, B, S_txt), i32),
+        "targets": jax.ShapeDtypeStruct(_token_shape(cfg, B, S_txt), i32),
+        "mask": jax.ShapeDtypeStruct((B, S_txt), jnp.float32),
+    }
+    if cfg.vision_stub:
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    S_txt = S - cfg.n_patches if cfg.vision_stub else S
+    specs = {"tokens": jax.ShapeDtypeStruct(_token_shape(cfg, B, S_txt),
+                                            jnp.int32)}
+    if cfg.vision_stub:
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """One new token against a cache of capacity shape.seq_len."""
+    B = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct(_token_shape(cfg, B, 1), jnp.int32),
+        "lengths": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape)
+    raise ValueError(shape.kind)
+
+
+def apply_delay_pattern(tokens: np.ndarray, pad: int = 0) -> np.ndarray:
+    """MusicGen delay pattern: codebook c shifted right by c steps."""
+    B, S, C = tokens.shape
+    out = np.full_like(tokens, pad)
+    for c in range(C):
+        out[:, c:, c] = tokens[:, : S - c, c]
+    return out
+
+
+def synthetic_batches(rcfg: RunConfig, mesh=None):
+    """Returns batch_fn(step)->batch of concrete arrays (seeded, CPU-sized)."""
+    cfg = rcfg.model
+    shape = rcfg.shape
+
+    def batch_fn(step: int):
+        rng = np.random.default_rng(rcfg.seed * 100003 + step)
+        B, S = shape.global_batch, shape.seq_len
+        S_txt = S - cfg.n_patches if cfg.vision_stub else S
+        # learnable structure: each row is an arithmetic token sequence
+        # (stride 1..4, random phase) so CE demonstrably decreases.
+        tshape = _token_shape(cfg, B, S_txt + 1)
+        phase = rng.integers(0, cfg.vocab_size, (B,) + (1,) * (len(tshape) - 1))
+        stride = rng.integers(1, 5, (B,) + (1,) * (len(tshape) - 1))
+        t = np.arange(S_txt + 1).reshape(1, S_txt + 1,
+                                         *([1] * (len(tshape) - 2)))
+        toks = ((phase + stride * t) % cfg.vocab_size).astype(np.int32)
+        toks = np.broadcast_to(toks, tshape).copy()
+        if cfg.n_codebooks > 1:
+            toks = apply_delay_pattern(toks)
+        batch = {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "targets": jnp.asarray(toks[:, 1:]),
+            "mask": jnp.ones((B, S_txt), jnp.float32),
+        }
+        if cfg.vision_stub:
+            patches = rng.standard_normal((B, cfg.n_patches, cfg.d_model),
+                                          dtype=np.float32)
+            batch["patches"] = jnp.asarray(patches, jnp.dtype(cfg.dtype))
+        return batch
+
+    return batch_fn

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot spots (+ jnp oracles in ref.py).
+
+flash_attention  prefill/train attention (MXU-tiled online softmax)
+decode_attention flash-decoding vs a KV cache (per-row lengths, GQA-native)
+ssd_scan         Mamba2 chunked state-space dual form (VMEM-carried state)
+moe_gmm          grouped expert GEMM (per-expert MXU-tiled matmul)
+
+ops.py picks compiled-vs-interpret per backend; model code under jit uses
+the mathematically-identical jnp paths in repro.models (XLA fuses those),
+so kernels are exercised through ops.py and validated against ref.py.
+"""

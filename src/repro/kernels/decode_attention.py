@@ -1,0 +1,103 @@
+"""Flash-decoding as a Pallas TPU kernel (single-token GQA vs KV cache).
+
+GPU flash-decoding splits the KV cache across SMs and combines partial
+softmaxes. The TPU analogue: the grid is (batch, kv_heads, kv_blocks) with
+the kv-block axis innermost/sequential; the (G, hd) output tile for one kv
+head's query group plus its fp32 (m, l) accumulators stay resident in VMEM
+across the sweep. GQA is exploited directly — queries arrive grouped per
+kv head, so no repeated-KV materialization ever touches HBM. Length masking
+uses the per-row cache fill (continuous batching: every row differs).
+
+Across-chip sequence sharding of the same computation lives in
+repro.parallel.collectives (shard_map + psum combine); this kernel is the
+per-shard body's TPU-optimal form.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, block_s: int, scale: float):
+    sj = pl.program_id(2)
+    ns = pl.num_programs(2)
+    length = len_ref[0]
+
+    @pl.when(sj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(sj * block_s < length)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = sj * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(sj == ns - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_s: int = 512,
+                     interpret: bool = False):
+    """q: (B,H,hd); k_cache/v_cache: (B,S,KVH,hd); lengths: (B,) valid fill.
+
+    Returns (B,H,hd). H must be a multiple of KVH (GQA groups).
+    """
+    B, H, hd = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    block_s = min(block_s, max(S, 8))
+    pad_s = (-S) % block_s
+    if pad_s:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    Sp = S + pad_s
+    qg = q.reshape(B, KVH, G, hd)
+    grid = (B, KVH, Sp // block_s)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_s=block_s,
+                          scale=1.0 / (hd ** 0.5)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda b, h, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(B, H, hd)

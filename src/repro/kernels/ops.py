@@ -1,0 +1,45 @@
+"""Dispatch layer: Pallas kernel on TPU, interpret-mode on CPU, oracle check.
+
+``use_pallas()`` gates the kernels into the model code: on a real TPU the
+compiled kernels run; on the CPU container the same kernel bodies execute
+via ``interpret=True`` (tests) while jit/dry-run paths use the pure-jnp
+equivalents in ``repro.models`` (identical math, XLA-fused).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention import decode_attention  # noqa: F401
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.moe_gmm import moe_gmm  # noqa: F401
+from repro.kernels.ssd_scan import ssd_scan  # noqa: F401
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode is required anywhere but a real TPU."""
+    return not on_tpu()
+
+
+def attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+              block_k: int = 256):
+    """(BH,S,hd) flash attention with backend-appropriate execution."""
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=interpret_default())
+
+
+def decode(q, k_cache, v_cache, lengths, *, block_s: int = 512):
+    return decode_attention(q, k_cache, v_cache, lengths, block_s=block_s,
+                            interpret=interpret_default())
+
+
+def ssd(x, dt, A, Bg, Cg, *, chunk: int = 128):
+    return ssd_scan(x, dt, A, Bg, Cg, chunk=chunk,
+                    interpret=interpret_default())
+
+
+def gmm(x, w, **kw):
+    return moe_gmm(x, w, interpret=interpret_default(), **kw)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q,k,v: (BH, S, hd) fp32/bf16. Plain materialized softmax attention."""
+    f32 = jnp.float32
+    S, Sk = q.shape[1], k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(f32), k.astype(f32))
+    s = s / (q.shape[-1] ** 0.5)
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(f32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q: (B,H,hd); caches: (B,S,KVH,hd); lengths: (B,). GQA decode."""
+    B, H, hd = q.shape
+    KVH = k_cache.shape[2]
+    G = H // KVH
+    f32 = jnp.float32
+    qg = q.reshape(B, KVH, G, hd).astype(f32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(f32)) / (hd ** 0.5)
+    valid = jnp.arange(k_cache.shape[1])[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(f32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bg, Cg, *, chunk: int):
+    """Mamba2 SSD oracle (sequential recurrence, token by token).
+
+    x: (B,S,nh,hp); dt: (B,S,nh) f32; A: (nh,); Bg/Cg: (B,S,ng,ds).
+    Returns (y (B,S,nh,hp) fp32, state (B,nh,hp,ds) fp32).
+    """
+    f32 = jnp.float32
+    B, S, nh, hp = x.shape
+    ng, ds = Bg.shape[-2:]
+    rep = nh // ng
+    Bh = jnp.repeat(Bg.astype(f32), rep, axis=2)
+    Ch = jnp.repeat(Cg.astype(f32), rep, axis=2)
+    xf = x.astype(f32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp          # (B,nh,hp), (B,nh), (B,nh,ds) x2
+        decay = jnp.exp(dtt * A)       # (B,nh)
+        xdt = xt * dtt[..., None]
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bhs,bhp->bhps", Bt, xdt)
+        y = jnp.einsum("bhs,bhps->bhp", Ct, state)
+        return state, y
+
+    state0 = jnp.zeros((B, nh, hp, ds), f32)
+    state, ys = jax.lax.scan(
+        step, state0,
+        (xf.transpose(1, 0, 2, 3), dt.astype(f32).transpose(1, 0, 2),
+         Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def moe_gmm_ref(x, w):
+    """Grouped expert GEMM oracle. x: (E,C,d); w: (E,d,f) -> (E,C,f)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

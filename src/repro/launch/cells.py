@@ -1,0 +1,238 @@
+"""Cell construction: (architecture x input shape x mesh) -> lowerable step.
+
+A *cell* bundles everything the dry-run needs: the jitted step function with
+explicit in/out shardings and the abstract arguments (ShapeDtypeStructs) to
+lower against. No device memory is allocated for any full-size config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ParallelConfig, RunConfig, ShapeConfig
+from repro.data.synthetic import input_specs
+from repro.models.lm import LM
+from repro.models.module import is_axes_leaf
+from repro.parallel.sharding import (
+    AXIS_DATA, AXIS_MODEL, AXIS_POD, batch_axes, resolve_spec,
+)
+from repro.train.train_step import build_train_step, make_optimizer, state_specs
+
+# param bytes above which storage goes FSDP (gather-per-layer)
+FSDP_THRESHOLD_BYTES = 100e9
+
+# archs whose full-attention makes long_500k meaningless (skip per spec)
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def default_parallel(cfg: ModelConfig, shape: ShapeConfig,
+                     mesh: Mesh | None = None) -> ParallelConfig:
+    param_bytes = cfg.param_count() * 2
+    strategy = "fsdp_tp" if param_bytes > FSDP_THRESHOLD_BYTES else "tp"
+    micro = 1
+    if shape.kind == "train" and mesh is not None:
+        rows = shape.global_batch
+        for a in batch_axes(mesh):
+            rows //= mesh.shape[a]
+        # TP models: one row of live activations per microbatch minimizes
+        # the layer-scan carry (wire is microbatch-independent for them).
+        # FSDP *MoE* models re-gather expert weights EVERY microbatch —
+        # §Perf measured wire scaling ~linearly with the count (kimi-k2:
+        # 17.2 TB @16 -> 6.2 TB @4), so cap them at 4 and pay the
+        # activation memory. Dense-FSDP (internvl) keeps 16: its wire is
+        # activation-AR-dominated (-21% only) while temp grew 3.3x at 4.
+        cap = 4 if (strategy == "fsdp_tp" and cfg.moe) else 16
+        micro = max(1, min(rows, cap))
+        while rows % micro:
+            micro -= 1
+    # prefill: sequence-parallel ring attention (unrepeated-GQA kv shards
+    # rotate via collective_permute) — §Perf It.6 measured -13..19% wire on
+    # the collective-dominated prefill cells. It computes the full masked
+    # pair grid, so attn_impl stays "masked" for the flops model; the
+    # single-device fallback uses the chunked path.
+    ring = shape.kind == "prefill"
+    return ParallelConfig(
+        strategy=strategy,
+        zero1=True,
+        remat="block" if shape.kind == "train" else "none",
+        microbatches=micro,
+        attn_q_chunk=512,
+        attn_kv_chunk=1024,
+        attn_impl="masked",
+        attn_seq_parallel=ring,
+    )
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.family not in LONG_OK_FAMILIES:
+        return False, "pure full-attention arch: 524k cell skipped per shape rules"
+    return True, ""
+
+
+def _guard_batch_axes(mesh: Mesh, B: int):
+    axes = batch_axes(mesh)
+    if not axes:
+        return None
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if B % total == 0:
+        return axes
+    if B % mesh.shape[AXIS_DATA] == 0 and AXIS_DATA in mesh.axis_names:
+        return (AXIS_DATA,)
+    return None
+
+
+def batch_shardings(mesh: Mesh, tree, B: int):
+    axes = _guard_batch_axes(mesh, B)
+    def one(x):
+        spec = P(axes, *([None] * (len(x.shape) - 1)))
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, tree)
+
+
+def params_shardings(lm: LM, axes_tree, mesh: Mesh, strategy: str):
+    params_abs, _ = lm.init(None, abstract=True)
+    leaves_a = jax.tree.leaves(axes_tree, is_leaf=is_axes_leaf)
+    leaves_p, treedef = jax.tree.flatten(params_abs)
+    shardings = [
+        NamedSharding(mesh, resolve_spec(a, p.shape, mesh, strategy))
+        for a, p in zip(leaves_a, leaves_p)
+    ]
+    return jax.tree.unflatten(treedef, shardings)
+
+
+def cache_shardings(lm: LM, mesh: Mesh, rt, B: int):
+    """Shardings for the decode cache: batch over data axes; KV heads over
+    ``model`` when divisible, else *sequence* over ``model`` (flash-decode)."""
+    cfg = lm.cfg
+    baxes = _guard_batch_axes(mesh, B)
+    mode = rt.decode_kv_shard(cfg)
+    shapes = lm.cache_shapes(B, 1)  # structure only
+
+    def attn_spec(x):
+        # (R, B, S, KVH, hd)
+        if mode == "seq":
+            return P(None, baxes, AXIS_MODEL, None, None)
+        return P(None, baxes, None, AXIS_MODEL, None)
+
+    def build(path_kind, x):
+        if path_kind == "kv":
+            return NamedSharding(mesh, attn_spec(x))
+        if path_kind == "conv":  # (R,B,k-1,ch) ch = d_inner or ng*ds
+            ax = AXIS_MODEL if x.shape[-1] % mesh.shape[AXIS_MODEL] == 0 \
+                and x.shape[-1] >= mesh.shape[AXIS_MODEL] else None
+            return NamedSharding(mesh, P(None, baxes, None, ax))
+        # state: (R,B,nh,hp,ds)
+        ax = AXIS_MODEL if x.shape[2] % mesh.shape[AXIS_MODEL] == 0 else None
+        return NamedSharding(mesh, P(None, baxes, ax, None, None))
+
+    out = {}
+    for pos, c in shapes.items():
+        if cfg.block_kind(int(pos[3:])) == "attn":
+            out[pos] = (build("kv", c[0]), build("kv", c[1]))
+        else:
+            conv, state = c
+            out[pos] = ({k: build("conv", v) for k, v in conv.items()},
+                        build("state", state))
+    return out
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    parallel: ParallelConfig
+    jitted: Any          # jit'd fn with shardings
+    args: tuple          # abstract args to .lower(*args)
+    scan_trips: dict     # name -> trip count (roofline correction)
+    kind: str
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               parallel: ParallelConfig | None = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    parallel = parallel or default_parallel(cfg, shape, mesh)
+    lm = LM(cfg)
+    rcfg = RunConfig(model=cfg, shape=shape, parallel=parallel)
+    specs = input_specs(cfg, shape)
+    _, axes_tree = lm.init(None, abstract=True)
+
+    R = cfg.n_layers // cfg.pattern_period
+    S = shape.seq_len
+    trips = {"layers": R}
+
+    if shape.kind == "train":
+        step_fn, rt, opt = build_train_step(lm, rcfg, mesh)
+        sspecs = state_specs(lm, axes_tree, mesh, parallel)
+        state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                                is_leaf=lambda x: isinstance(x, P))
+        state_abs = opt.init_abstract(lm.init(None, abstract=True)[0])
+        batch_sh = batch_shardings(mesh, specs, shape.global_batch)
+        jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+        args = (state_abs, specs)
+        trips.update(_attn_trips(cfg, parallel, S, mesh), micro=parallel.microbatches)
+    elif shape.kind == "prefill":
+        rt = lm.runtime(parallel, mesh)
+        p_sh = params_shardings(lm, axes_tree, mesh, parallel.strategy)
+        params_abs, _ = lm.init(None, abstract=True)
+        batch_sh = batch_shardings(mesh, specs, shape.global_batch)
+        c_sh = cache_shardings(lm, mesh, rt, shape.global_batch)
+
+        def prefill_step(params, batch):
+            logits, caches, _ = lm.prefill(params, rt, batch)
+            return jnp.argmax(logits, axis=-1), caches
+
+        jitted = jax.jit(prefill_step, in_shardings=(p_sh, batch_sh),
+                         out_shardings=(None, c_sh))
+        args = (params_abs, specs)
+        trips.update(_attn_trips(cfg, parallel, S, mesh))
+    else:  # decode
+        rt = lm.runtime(parallel, mesh)
+        p_sh = params_shardings(lm, axes_tree, mesh, parallel.strategy)
+        params_abs, _ = lm.init(None, abstract=True)
+        B = shape.global_batch
+        cache_abs = lm.cache_shapes(B, S)
+        c_sh = cache_shardings(lm, mesh, rt, B)
+        batch_sh = batch_shardings(mesh, specs, B)
+
+        def serve_step(params, caches, batch):
+            logits, new_caches = lm.decode(params, rt, batch["tokens"],
+                                           batch["lengths"], caches)
+            return jnp.argmax(logits, axis=-1), new_caches
+
+        jitted = jax.jit(serve_step, in_shardings=(p_sh, c_sh, batch_sh),
+                         out_shardings=(None, c_sh), donate_argnums=(1,))
+        args = (params_abs, cache_abs, specs)
+
+    return Cell(arch=arch, shape=shape, cfg=cfg, parallel=parallel,
+                jitted=jitted, args=args, scan_trips=trips, kind=shape.kind)
+
+
+def _attn_trips(cfg: ModelConfig, parallel: ParallelConfig, S: int,
+                mesh: Mesh | None = None) -> dict:
+    out = {}
+    has_attn = any(cfg.block_kind(i) == "attn" for i in range(cfg.pattern_period))
+    has_ssm = any(cfg.block_kind(i) == "ssm" for i in range(cfg.pattern_period))
+    if has_attn:
+        if parallel.attn_seq_parallel and mesh is not None:
+            out["ring_steps"] = mesh.shape.get(AXIS_MODEL, 1)
+        elif parallel.attn_impl == "triangular":
+            nq = S // min(parallel.attn_q_chunk, S)
+            out["attn_pairs"] = nq * (nq + 1) // 2
+        else:
+            out["attn_q"] = S // min(parallel.attn_q_chunk, S)
+            out["attn_kv"] = S // min(parallel.attn_kv_chunk, S)
+    if has_ssm:
+        out["ssd_chunks"] = max(S // cfg.ssm_chunk, 1)
+    return out

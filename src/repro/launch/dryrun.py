@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import — jax locks the
+# device count at first init, and the production meshes need 512 placeholder
+# host devices (2 pods x 16 x 16). The module docstring therefore lives here:
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For every cell this driver records a JSON artifact with:
+  - memory_analysis (argument/output/temp/peak bytes per device),
+  - cost_analysis  (HLO flops / bytes accessed, once-per-while-body),
+  - the parsed collective ops (kind, bytes, group size, pod-crossing) and
+    their wire-byte totals after trip-count scaling,
+  - the static trip counts used for scaling (layer scan, microbatches,
+    attention chunk loops, SSD chunks),
+so benchmarks/roofline.py can derive the three roofline terms offline.
+
+Usage:
+  python -m repro.launch.dryrun                     # all cells, both meshes
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch.cells import build_cell, cell_applicable
+from repro.launch.hlo_analysis import (
+    collective_summary, parse_collectives, scale_by_loops,
+)
+from repro.launch.mesh import make_production_mesh
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def mesh_for(name: str):
+    return make_production_mesh(multi_pod=(name == "multipod"))
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             parallel=None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": why}
+    mesh = mesh_for(mesh_name)
+    n_dev = mesh.size
+    pod_size = 256 if mesh_name == "multipod" else 0
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh, parallel)
+    with mesh:
+        lowered = cell.jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    ops, while_callers = parse_collectives(hlo, n_dev, pod_size)
+    trips = cell.scan_trips
+    # while nesting, outermost first: microbatch loop (train), layer scan,
+    # then intra-layer chunk loops (q-chunk scan wrapping kv-chunk scan for
+    # attention; single chunk loop for SSD / triangular attention)
+    depth_trips = []
+    if cell.kind == "train" and trips.get("micro", 1) > 1:
+        depth_trips.append(trips["micro"])
+    depth_trips.append(trips.get("layers", 1))
+    if "ring_steps" in trips:
+        depth_trips.append(max(trips["ring_steps"], trips.get("ssd_chunks", 1)))
+    elif "attn_pairs" in trips:
+        depth_trips.append(trips["attn_pairs"])
+    elif "attn_q" in trips:
+        depth_trips.append(max(trips["attn_q"], trips.get("ssd_chunks", 1)))
+        depth_trips.append(trips.get("attn_kv", 1))
+    elif "ssd_chunks" in trips:
+        depth_trips.append(trips["ssd_chunks"])
+    scale_by_loops(ops, while_callers, depth_trips)
+    summary = collective_summary(ops)
+    art = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok",
+        "n_devices": n_dev,
+        "parallel": vars(cell.parallel) if hasattr(cell.parallel, "__dict__")
+                    else cell.parallel.__dict__,
+        "trips": trips,
+        "depth_trips": depth_trips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "generated_code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "cost": {
+            "flops": ca.get("flops", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0),
+            "transcendentals": ca.get("transcendentals", 0.0),
+        },
+        "collectives": summary,
+        "param_count": cfg.param_count(),
+        "param_count_active": cfg.param_count(active=True),
+    }
+    return art
+
+
+def save_artifact(art: dict) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    name = f"{art['arch']}__{art['shape']}__{art['mesh']}.json"
+    path = os.path.join(ARTIFACT_DIR, name)
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCHS), nargs="*")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES), nargs="*")
+    ap.add_argument("--mesh", default=None, choices=["pod", "multipod"],
+                    nargs="*")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    archs = args.arch or list(ARCHS)
+    shapes = args.shape or list(SHAPES)
+    meshes = args.mesh or ["pod", "multipod"]
+    cells = [(a, s, m) for a in archs for s in shapes for m in meshes]
+    if args.list:
+        for c in cells:
+            print(*c)
+        return
+    n_ok = n_skip = n_fail = 0
+    for arch, shape, mesh_name in cells:
+        tag = f"{arch:22s} {shape:12s} {mesh_name:9s}"
+        try:
+            art = run_cell(arch, shape, mesh_name)
+        except Exception as e:  # a failure here is a sharding bug
+            n_fail += 1
+            art = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "status": "failed", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()}
+            save_artifact(art)
+            print(f"{tag} FAILED  {type(e).__name__}: {e}", flush=True)
+            continue
+        save_artifact(art)
+        if art["status"] == "skipped":
+            n_skip += 1
+            print(f"{tag} skipped ({art['reason'][:50]})", flush=True)
+        else:
+            n_ok += 1
+            m = art["memory"]
+            print(f"{tag} ok  compile={art['compile_s']:6.1f}s "
+                  f"temp={m['temp_bytes']/2**30:7.2f}GiB "
+                  f"args={m['argument_bytes']/2**30:7.2f}GiB "
+                  f"flops={art['cost']['flops']:.2e} "
+                  f"wire={art['collectives']['wire_bytes_intra_pod']/2**30:.2f}GiB",
+                  flush=True)
+    print(f"\n{n_ok} ok, {n_skip} skipped, {n_fail} failed "
+          f"of {len(cells)} cells")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""Post-partitioning HLO analysis: collective bytes, wire cost, loop nesting.
+
+The compiled module is the *per-device* SPMD program, so all shapes are
+local-shard shapes. We extract every collective op, size it from its result
+type, reconstruct its replica groups (explicit-list or iota-with-transpose
+format) to classify group size and pod-boundary crossing, and scale by the
+trip counts of enclosing ``while`` loops (scan bodies are emitted once but
+executed trip-count times — XLA's cost_analysis has the same once-only
+convention, which benchmarks/roofline.py corrects with the cell's known
+static trip counts).
+
+Wire-byte model (ring algorithms, n = group size):
+  all-gather        (n-1)/n * result_bytes      (result = gathered)
+  reduce-scatter    (n-1)   * result_bytes      (operand = n * result)
+  all-reduce        2 (n-1)/n * result_bytes
+  all-to-all        (n-1)/n * result_bytes
+  collective-permute  result_bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(typestr: str) -> int:
+    """'bf16[8,512]{1,0}' -> bytes; tuples '(f32[..], s32[..])' -> sum."""
+    total = 0
+    for m in _SHAPE_RE.finditer(typestr):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    crosses_pod: bool
+    computation: str
+    trips: int = 1
+    dtype: str = ""
+
+    @property
+    def tpu_corrected_bytes(self) -> float:
+        """XLA:CPU has no native bf16 dot, so dot partial sums materialize
+        as f32 and their all-reduces double in size; on TPU the same ARs
+        run in bf16. Halve f32 reduction collectives for the TPU estimate."""
+        w = self.wire_bytes
+        if self.dtype == "f32" and self.kind in ("all-reduce",
+                                                 "reduce-scatter"):
+            return w / 2
+        return w
+
+    @property
+    def wire_bytes(self) -> float:
+        n = max(self.group_size, 1)
+        f = (n - 1) / n
+        if self.kind == "all-gather":
+            w = f * self.result_bytes
+        elif self.kind == "reduce-scatter":
+            w = (n - 1) * self.result_bytes
+        elif self.kind == "all-reduce":
+            w = 2 * f * self.result_bytes
+        elif self.kind == "all-to-all":
+            w = f * self.result_bytes
+        else:  # collective-permute
+            w = self.result_bytes
+        return w * self.trips
+
+
+def _parse_groups(attr: str, n_devices: int, pod_size: int):
+    """Returns (group_size, crosses_pod) from a replica_groups attribute.
+
+    Handles the explicit form ``{{0,1},{2,3},...}`` and the iota form
+    ``[G,S]<=[d0,d1,...]T(p0,p1,...)`` (reshape-transpose-flatten)."""
+    m = re.search(r"replica_groups=\{\{([\d,{} ]*)\}\}", attr)
+    if m:
+        first = m.group(1).split("}")[0]
+        ids = [int(x) for x in first.split(",") if x.strip().isdigit()]
+        size = max(len(ids), 1)
+        crosses = (len({i // pod_size for i in ids}) > 1) if pod_size else False
+        return size, crosses
+    m = re.search(
+        r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?",
+        attr)
+    if m:
+        ngroups, size = int(m.group(1)), int(m.group(2))
+        if not pod_size:
+            return size, False
+        bounds = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(bounds))).reshape(bounds)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        groups = ids.reshape(ngroups, size)
+        crosses = bool(np.any(groups // pod_size !=
+                              (groups[:, :1] // pod_size)))
+        return size, crosses
+    # collective-permute: source_target_pairs instead of replica_groups
+    m = re.search(r"source_target_pairs=\{(\{[\d,{} ]*\})\}", attr)
+    if m:
+        pairs = re.findall(r"\{(\d+),(\d+)\}", m.group(1))
+        crosses = (any(int(a) // pod_size != int(b) // pod_size
+                       for a, b in pairs) if pod_size else False)
+        return 2, crosses
+    return n_devices, bool(pod_size)
+
+
+def parse_collectives(hlo_text: str, n_devices: int, pod_size: int = 0):
+    """Returns (list[CollectiveOp], while_callers body->parent pairs)."""
+    ops: list[CollectiveOp] = []
+    current_comp = "main"
+    while_callers: list[tuple[str, str]] = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # computation header: `%name (params...) -> type {` or `ENTRY ...`
+        if stripped.endswith("{") and "= " not in stripped and (
+                stripped.startswith("%") or stripped.startswith("ENTRY")):
+            name = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            if name:
+                current_comp = name.group(1)
+            continue
+        if "= " not in line:
+            continue
+        mw = re.search(r"body=%?([\w\.\-]+)", line)
+        if mw and " while(" in line:
+            while_callers.append((mw.group(1), current_comp))
+        for kind in _COLLECTIVES:
+            if f" {kind}(" not in line and f" {kind}-start(" not in line:
+                continue
+            _, _, rhs = line.partition("= ")
+            # result type(s) precede the op name on the RHS
+            type_str = rhs.split(f" {kind}")[0]
+            result_bytes = _shape_bytes(type_str)
+            mdt = _SHAPE_RE.search(type_str)
+            dtype = mdt.group(1) if mdt else ""
+            if kind == "all-to-all" and type_str.lstrip().startswith("("):
+                # tuple a2a: payload counted once, not per tuple element
+                pass
+            size, crosses = _parse_groups(line, n_devices, pod_size)
+            ops.append(CollectiveOp(kind, result_bytes, size, crosses,
+                                    current_comp, dtype=dtype))
+            break
+    return ops, while_callers
+
+
+def scale_by_loops(ops, while_callers, trips_by_depth):
+    """Multiply each op's trips by the product of enclosing while trips.
+
+    ``trips_by_depth``: outermost-first trip counts (e.g. [micro, layers,
+    chunks]). A body nested d levels deep executes prod(trips[:d]) times.
+    When the emitted module has fewer while levels than the logical
+    schedule (XLA unrolled an inner chunk loop), the surviving levels are
+    the outermost ones — collectives live at the layer/microbatch level,
+    the unrolled inner loops are local math.
+    """
+    parent = dict(while_callers)
+
+    def depth_of(comp: str) -> int:
+        d = 0
+        c = comp
+        seen = set()
+        while c in parent and c not in seen:
+            seen.add(c)
+            d += 1
+            c = parent[c]
+        return d
+
+    n_levels = max((depth_of(op.computation) for op in ops), default=0)
+    trips = trips_by_depth[:n_levels]
+    for op in ops:
+        d = depth_of(op.computation)
+        t = 1
+        for i in range(min(d, len(trips))):
+            t *= trips[i]
+        op.trips = t
+    return ops
+
+
+def collective_summary(ops) -> dict:
+    out = {
+        "n_ops": len(ops),
+        "wire_bytes_intra_pod": 0.0,
+        "wire_bytes_cross_pod": 0.0,
+        "wire_bytes_intra_pod_tpu": 0.0,
+        "wire_bytes_cross_pod_tpu": 0.0,
+        "by_kind": {},
+    }
+    for op in ops:
+        out["by_kind"].setdefault(op.kind, 0.0)
+        out["by_kind"][op.kind] += op.wire_bytes
+        if op.crosses_pod:
+            out["wire_bytes_cross_pod"] += op.wire_bytes
+            out["wire_bytes_cross_pod_tpu"] += op.tpu_corrected_bytes
+        else:
+            out["wire_bytes_intra_pod"] += op.wire_bytes
+            out["wire_bytes_intra_pod_tpu"] += op.tpu_corrected_bytes
+    return out

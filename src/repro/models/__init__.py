@@ -1,0 +1,1 @@
+from repro.models.lm import LM  # noqa: F401

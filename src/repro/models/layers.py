@@ -1,0 +1,63 @@
+"""Shared layers: RMSNorm, RoPE, MLP variants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_init(scope, name, dim):
+    scope.param(name, (dim,), ("norm",), init="ones")
+
+
+def rmsnorm(scale, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------- MLP ----------------
+
+def mlp_init(scope, cfg, d_ff: int):
+    d = cfg.d_model
+    if cfg.mlp_act == "swiglu":
+        scope.param("w_in", (d, d_ff), ("embed", "mlp"))
+        scope.param("w_gate", (d, d_ff), ("embed", "mlp"))
+    else:  # sq_relu (nemotron): plain 2-matrix MLP
+        scope.param("w_in", (d, d_ff), ("embed", "mlp"))
+    scope.param("w_out", (d_ff, d), ("mlp", "embed"))
+
+
+def mlp_apply(p, x, act: str):
+    h = jnp.einsum("...d,df->...f", x, p["w_in"])
+    if act == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    elif act == "sq_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(act)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"])
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap

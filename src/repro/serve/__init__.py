@@ -1,0 +1,1 @@
+from repro.serve.engine import Engine, Request  # noqa: F401

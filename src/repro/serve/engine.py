@@ -1,0 +1,125 @@
+"""Continuous-batching inference engine (the MTC-TRE payload).
+
+Slot-based KV/SSM cache: ``max_batch`` slots of capacity ``max_len``.
+Requests are admitted into free slots (prefill writes the slot), then all
+active slots decode together each step; finished slots free immediately so
+new requests join mid-flight — continuous batching. Greedy sampling.
+
+MTC workflows (Montage-style DAGs of inference tasks) are driven by
+``repro.core.tre.MTCRuntimeEnv``, which feeds this engine only tasks whose
+dependencies completed — the DawningCloud "trigger monitor" role.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LM, Runtime
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # (P,) or (P,ncb) prompt tokens
+    max_new_tokens: int = 16
+    patches: np.ndarray | None = None
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, lm: LM, params, rt: Runtime, *, max_batch: int,
+                 max_len: int):
+        self.lm, self.params, self.rt = lm, params, rt
+        self.max_batch, self.max_len = max_batch, max_len
+        self.caches = lm.init_cache(max_batch, max_len)
+        self.lengths = jnp.zeros((max_batch,), jnp.int32)
+        self.active: dict[int, Request] = {}     # slot -> request
+        self.free = list(range(max_batch))
+        self._decode = jax.jit(
+            lambda p, t, l, c: lm.decode(p, rt, t, l, c),
+            donate_argnums=(3,))
+        self._prefill = {}
+        self.steps = 0
+
+    # ---------------------------------------------------------- prefill
+    def _prefill_fn(self, plen: int, has_patches: bool):
+        key = (plen, has_patches)
+        if key not in self._prefill:
+            def f(params, batch):
+                return self.lm.prefill(params, self.rt, batch)
+            self._prefill[key] = jax.jit(f)
+        return self._prefill[key]
+
+    def _splice_caches(self, slot: int, pre_caches):
+        """Write a prefill cache (batch=1, seq=P) into the slot."""
+        def splice(dst, src):
+            # attn kv: src (R,1,P,KVH,hd) -> dst (R,B,S,KVH,hd) at [:,slot,:P]
+            # ssm conv: src (R,1,k-1,ch)  -> dst (R,B,k-1,ch)
+            # ssm state: src (R,1,nh,hp,ds) -> dst (R,B,nh,hp,ds)
+            src = src.astype(dst.dtype)
+            start = (0, slot) + (0,) * (dst.ndim - 2)
+            return jax.lax.dynamic_update_slice(dst, src, start)
+        self.caches = jax.tree.map(splice, self.caches, pre_caches)
+
+    def admit(self, req: Request) -> bool:
+        if not self.free:
+            return False
+        plen = len(req.tokens)
+        n_img = self.lm.cfg.n_patches if req.patches is not None else 0
+        if plen + n_img + req.max_new_tokens > self.max_len:
+            raise ValueError("request exceeds cache capacity")
+        slot = self.free.pop()
+        batch = {"tokens": jnp.asarray(req.tokens)[None]}
+        if req.patches is not None:
+            batch["patches"] = jnp.asarray(req.patches)[None]
+        logits, pre_caches, _ = self._prefill_fn(plen, req.patches is not None)(
+            self.params, batch)
+        self._splice_caches(slot, pre_caches)
+        self.lengths = self.lengths.at[slot].set(plen + n_img)
+        tok = np.asarray(jnp.argmax(logits, axis=-1))[0]  # () or (ncb,)
+        req.out_tokens.append(tok)
+        self.active[slot] = req
+        return True
+
+    # ----------------------------------------------------------- decode
+    def step(self) -> list[Request]:
+        """One decode step for all active slots; returns finished requests."""
+        if not self.active:
+            return []
+        ncb = self.lm.cfg.n_codebooks
+        tok_shape = (self.max_batch, 1) if ncb <= 1 else (self.max_batch, 1, ncb)
+        toks = np.zeros(tok_shape, np.int32)
+        for slot, req in self.active.items():
+            toks[slot, 0] = req.out_tokens[-1]
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(toks), self.lengths, self.caches)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))  # (B,) or (B,ncb)
+        upd = np.zeros((self.max_batch,), np.int32)
+        finished = []
+        for slot, req in list(self.active.items()):
+            req.out_tokens.append(nxt[slot])
+            upd[slot] = 1
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+                self.free.append(slot)
+        self.lengths = self.lengths + jnp.asarray(upd)
+        self.steps += 1
+        return finished
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Serve a list of requests to completion (admitting as slots free)."""
+        pending = list(requests)
+        done: list[Request] = []
+        while pending or self.active:
+            while pending and self.free:
+                self.admit(pending.pop(0))
+            done.extend(self.step())
+        return done

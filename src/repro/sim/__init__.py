@@ -1,0 +1,5 @@
+from repro.sim.engine import Sim  # noqa: F401
+from repro.sim.systems import SystemResult, WorkloadResult, run_system  # noqa: F401
+from repro.sim.traces import (  # noqa: F401
+    montage_like, nasa_ipsc_like, sdsc_blue_like, standard_workloads,
+)

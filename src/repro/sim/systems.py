@@ -1,0 +1,334 @@
+"""Emulated systems for the four usage models (paper §4.1, Figs 6-8).
+
+One ``REServer`` implements the runtime-environment server + scheduler +
+trigger monitor; it runs in two modes:
+
+  - ``fixed``  (DCS & SSP): the RE owns/leases a fixed-size cluster for the
+    whole workload period. DCS and SSP produce identical performance
+    (paper §4.5.2) and differ only in TCO (benchmarks/tco.py).
+  - ``dsp``    (DawningCloud): the RE starts with the policy's initial
+    resources ``B`` and renegotiates with the provision service via the
+    *same* ``PolicyEngine`` that drives the live elastic JAX controller.
+
+``DRPRunner`` models Deelman-style direct resource provision: each HTC job
+is an end user leasing its own nodes for ceil-hour of its runtime; an MTC
+workflow is one end-user application whose leased pool grows to its eager
+(no-queue) execution width and is held until the workflow finishes.
+
+All billing goes through ``repro.core.provision`` (1-hour lease units).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from repro.core.policy import MgmtPolicy, PolicyEngine
+from repro.core.provision import BILL_UNIT_S, ProvisionService
+from repro.core.scheduling import scheduler_for
+from repro.core.types import Job, Workload
+from repro.sim.engine import Sim
+
+
+# --------------------------------------------------------------------------
+# runtime-environment server (DCS / SSP / DawningCloud)
+# --------------------------------------------------------------------------
+class REServer:
+    def __init__(self, sim: Sim, workload: Workload, provision: ProvisionService,
+                 *, mode: str, fixed_nodes: int | None = None,
+                 policy: MgmtPolicy | None = None, count_adjust: bool = True,
+                 hold_until: float = 0.0):
+        assert mode in ("fixed", "dsp")
+        self.sim = sim
+        self.wl = workload
+        self.name = workload.name
+        self.provision = provision
+        self.mode = mode
+        self.hold_until = hold_until   # fixed REs persist at least this long
+        self.scheduler = scheduler_for(workload.kind)
+        self.count_adjust = count_adjust
+        self.queue: list[Job] = []
+        self.busy = 0
+        self.completed: list[Job] = []
+        self.destroyed = False
+        # trigger monitor state (MTC): dependency bookkeeping
+        self._ndeps = {j.jid: len(j.deps) for j in workload.jobs}
+        self._children: dict[int, list[Job]] = {}
+        for j in workload.jobs:
+            for d in j.deps:
+                self._children.setdefault(d, []).append(j)
+        # resources
+        if mode == "fixed":
+            assert fixed_nodes is not None
+            self.owned = fixed_nodes
+            ok = provision.request(self.name, fixed_nodes, sim.t,
+                                   count_adjust=count_adjust)
+            assert ok, "fixed RE could not lease its configuration"
+            self.engine = None
+        else:
+            assert policy is not None
+            self.engine = PolicyEngine(policy)
+            self.owned = policy.initial
+            ok = provision.request(self.name, policy.initial, sim.t,
+                                   count_adjust=count_adjust)
+            assert ok, "initial resources rejected"
+            sim.after(policy.scan_interval, self._scan)
+            sim.after(policy.release_interval, self._release_check)
+        # arrivals: only dependency-free jobs arrive by time; the trigger
+        # monitor submits dependent tasks when their last dependency finishes
+        for j in workload.jobs:
+            if not j.deps:
+                sim.at(j.arrival, self.submit, j)
+
+    # ------------------------------------------------------------ server
+    @property
+    def free(self) -> int:
+        return self.owned - self.busy
+
+    def _account_idle(self):
+        """Accumulate the time-integral of idle nodes. The hourly release
+        check frees blocks covered by the *time-averaged* idle of the past
+        hour: instantaneous idle thrashes (release->regrant bills a fresh
+        lease hour), whole-hour-idle ratchets the pool up; average idle
+        tracks the load curve with one hour of lag."""
+        t = self.sim.t
+        self._idle_acc = getattr(self, "_idle_acc", 0.0) + \
+            self.free * (t - getattr(self, "_idle_t", t))
+        self._idle_t = t
+
+    def submit(self, job: Job):
+        job.submit_time = self.sim.t
+        self.queue.append(job)
+        # DSP servers schedule at scan ticks (the scan both resizes and
+        # loads jobs, §3.2.2); fixed REs schedule on submission
+        if self.mode == "fixed":
+            self._try_start()
+
+    def _try_start(self):
+        for job in self.scheduler(self.queue, self.free):
+            self.queue.remove(job)
+            job.start = self.sim.t
+            self._account_idle()
+            self.busy += job.nodes
+            self.sim.after(job.runtime, self._finish, job)
+
+    def _finish(self, job: Job):
+        job.finish = self.sim.t
+        self._account_idle()
+        self.busy -= job.nodes
+        self.completed.append(job)
+        # trigger monitor: release newly-ready dependents into the queue
+        for child in self._children.get(job.jid, ()):
+            self._ndeps[child.jid] -= 1
+            if self._ndeps[child.jid] == 0:
+                self.submit(child)
+        if len(self.completed) == len(self.wl.jobs):
+            # fixed REs (DCS/SSP) hold their configuration for the whole
+            # workload period; DSP REs are destroyed once the work is done
+            self.sim.at(max(self.sim.t, self.hold_until), self._destroy)
+        else:
+            self._try_start()
+
+    # --------------------------------------------------------- dsp loops
+    def _scan(self):
+        if self.destroyed:
+            return
+        req = self.engine.scan([j.nodes for j in self.queue], self.owned)
+        if req > 0 and self.provision.request(self.name, req, self.sim.t,
+                                              count_adjust=self.count_adjust):
+            self._account_idle()
+            self.engine.granted(req)
+            self.owned += req
+        self._try_start()
+        self.sim.after(self.engine.policy.scan_interval, self._scan)
+
+    def _release_check(self):
+        if self.destroyed:
+            return
+        self._account_idle()
+        interval = self.engine.policy.release_interval
+        idle_avg = getattr(self, "_idle_acc", 0.0) / interval
+        rel = self.engine.release_check(int(min(idle_avg, self.free)))
+        if rel > 0:
+            self.provision.release(self.name, rel, self.sim.t,
+                                   count_adjust=self.count_adjust)
+            self.owned -= rel
+        self._idle_acc = 0.0
+        self.sim.after(self.engine.policy.release_interval, self._release_check)
+
+    def _destroy(self):
+        """All jobs done: service provider destroys the RE (releases leases)."""
+        if self.destroyed:
+            return
+        self.destroyed = True
+        self.provision.destroy(self.name, self.sim.t)
+
+
+# --------------------------------------------------------------------------
+# DRP (direct resource provision, Deelman et al.)
+# --------------------------------------------------------------------------
+class DRPRunner:
+    def __init__(self, sim: Sim, workload: Workload, provision: ProvisionService):
+        self.sim = sim
+        self.wl = workload
+        self.provision = provision
+        self.completed: list[Job] = []
+        self._ndeps = {j.jid: len(j.deps) for j in workload.jobs}
+        self._children: dict[int, list[Job]] = {}
+        for j in workload.jobs:
+            for d in j.deps:
+                self._children.setdefault(d, []).append(j)
+        if workload.kind == "htc":
+            for j in workload.jobs:
+                sim.at(j.arrival, self._run_htc_job, j)
+        else:
+            # one end-user pool for the whole workflow
+            self.pool_name = f"{workload.name}-user"
+            self.pool = 0          # leased high-watermark
+            self.in_use = 0
+            for j in workload.jobs:
+                if not j.deps:
+                    sim.at(j.arrival, self._run_mtc_task, j)
+
+    # HTC: every job is its own end user/lease
+    def _run_htc_job(self, job: Job):
+        job.submit_time = job.start = self.sim.t
+        user = f"{self.wl.name}-u{job.jid}"
+        self.provision.request(user, job.nodes, self.sim.t)
+        self.sim.after(job.runtime, self._finish_htc_job, job, user)
+
+    def _finish_htc_job(self, job: Job, user: str):
+        job.finish = self.sim.t
+        self.provision.release(user, job.nodes, self.sim.t)
+        self.completed.append(job)
+
+    # MTC: eager execution; pool grows to peak width, held to the end
+    def _run_mtc_task(self, job: Job):
+        job.submit_time = job.start = self.sim.t
+        need = self.in_use + job.nodes - self.pool
+        if need > 0:
+            self.provision.request(self.pool_name, need, self.sim.t)
+            self.pool += need
+        self.in_use += job.nodes
+        self.sim.after(job.runtime, self._finish_mtc_task, job)
+
+    def _finish_mtc_task(self, job: Job):
+        job.finish = self.sim.t
+        self.in_use -= job.nodes
+        self.completed.append(job)
+        for child in self._children.get(job.jid, ()):
+            self._ndeps[child.jid] -= 1
+            if self._ndeps[child.jid] == 0:
+                self._run_mtc_task(child)
+        if len(self.completed) == len(self.wl.jobs):
+            self.provision.destroy(self.pool_name, self.sim.t)
+            self.pool = 0
+
+
+# --------------------------------------------------------------------------
+# results
+# --------------------------------------------------------------------------
+@dataclass
+class WorkloadResult:
+    workload: str
+    kind: str
+    system: str
+    completed_in_window: int
+    completed_total: int
+    node_hours: float
+    makespan: float
+    tasks_per_second: float
+    mean_wait_s: float
+
+    def as_dict(self):
+        return dict(self.__dict__)
+
+
+@dataclass
+class SystemResult:
+    system: str
+    per_workload: dict[str, WorkloadResult]
+    total_node_hours: float
+    peak_nodes_per_hour: int
+    adjust_count: int
+    setup_overhead_s: float
+    window_s: float
+
+    @property
+    def overhead_s_per_hour(self) -> float:
+        return self.setup_overhead_s / max(self.window_s / 3600.0, 1e-9)
+
+
+def _collect(system: str, wl: Workload, jobs_done: list[Job],
+             node_hours: float, window: float) -> WorkloadResult:
+    done_total = len(jobs_done)
+    done_window = sum(1 for j in jobs_done if j.finish <= window + 1e-6)
+    finish = max((j.finish for j in jobs_done), default=0.0)
+    start = min((j.submit_time for j in jobs_done), default=0.0)
+    makespan = finish - start
+    tps = done_total / makespan if makespan > 0 else 0.0
+    waits = [j.wait for j in jobs_done if j.wait >= 0]
+    return WorkloadResult(
+        workload=wl.name, kind=wl.kind, system=system,
+        completed_in_window=done_window, completed_total=done_total,
+        node_hours=node_hours, makespan=makespan, tasks_per_second=tps,
+        mean_wait_s=sum(waits) / len(waits) if waits else 0.0)
+
+
+def run_system(system: str, workloads: list[Workload], *,
+               policies: dict[str, MgmtPolicy] | None = None,
+               capacity: int | None = None,
+               mtc_fixed_nodes: int | None = None) -> SystemResult:
+    """Run one emulated system over consolidated workloads.
+
+    system: "dcs" | "ssp" | "drp" | "dawningcloud"
+    policies: workload name -> MgmtPolicy (dawningcloud only)
+    mtc_fixed_nodes: DCS/SSP configuration for MTC workloads (paper: 166)
+    """
+    workloads = [wl.fresh() for wl in workloads]
+    sim = Sim()
+    provision = ProvisionService(capacity)
+    window = max(wl.period for wl in workloads)
+    runners = []
+    for wl in workloads:
+        if system in ("dcs", "ssp"):
+            nodes = (wl.trace_nodes if wl.kind == "htc"
+                     else (mtc_fixed_nodes or wl.trace_nodes))
+            runners.append(REServer(sim, wl, provision, mode="fixed",
+                                    fixed_nodes=nodes,
+                                    count_adjust=(system == "ssp"),
+                                    hold_until=wl.period))
+        elif system == "dawningcloud":
+            pol = (policies or {}).get(wl.name) or (
+                MgmtPolicy.htc(40, 1.2) if wl.kind == "htc"
+                else MgmtPolicy.mtc(10, 8.0))
+            runners.append(REServer(sim, wl, provision, mode="dsp", policy=pol))
+        elif system == "drp":
+            runners.append(DRPRunner(sim, wl, provision))
+        else:
+            raise ValueError(system)
+    sim.run()
+    # fixed REs persist for the whole workload period even after the last job
+    end = max(sim.t, window)
+    for r in runners:
+        if isinstance(r, REServer) and not r.destroyed:
+            r.provision.destroy(r.name, end)
+            r.destroyed = True
+    per = {}
+    for r in runners:
+        wl = r.wl
+        if system in ("dcs", "ssp"):
+            # paper §4.3: consumption = configuration size x workload period
+            nh = r.owned * math.ceil(wl.period / BILL_UNIT_S)
+        elif isinstance(r, REServer):
+            nh = provision.node_hours(wl.name, now=end)
+        else:  # DRP: sum this workload's end-user leases
+            nh = sum(l.billed_node_hours(end) for l in provision.closed_leases
+                     if l.tre.startswith(wl.name + "-u"))
+        per[wl.name] = _collect(system, wl, r.completed, nh, window)
+    total = sum(res.node_hours for res in per.values())
+    return SystemResult(
+        system=system, per_workload=per, total_node_hours=total,
+        peak_nodes_per_hour=provision.peak_nodes_per_hour(end),
+        adjust_count=provision.adjust_count(),
+        setup_overhead_s=provision.setup_overhead_s(),
+        window_s=window)

@@ -1,0 +1,2 @@
+from repro.train.optimizer import AdamW, TrainState  # noqa: F401
+from repro.train.train_step import build_train_step  # noqa: F401

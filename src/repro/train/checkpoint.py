@@ -1,0 +1,113 @@
+"""Sharded, atomic, elastic checkpoints (no orbax).
+
+Layout: ``<dir>/step_<n>/`` containing one ``.npy`` per leaf (bf16 stored as
+a uint16 view + dtype tag) and a msgpack ``manifest`` with the tree
+structure, dtypes and the step. Writes go to ``step_<n>.tmp`` and are
+``os.replace``d into place — a crash mid-write never corrupts the latest
+checkpoint, which is what the DSP elastic controller relies on when it
+kills and re-shards a training TRE.
+
+Checkpoints are *sharding-agnostic*: leaves are saved as full host arrays
+and re-placed under whatever mesh/sharding the restoring job uses — this is
+the mechanism behind elastic data-parallel resizing (grow/shrink the
+``data`` axis between restarts).
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _leaf_path(d: str, i: int) -> str:
+    return os.path.join(d, f"leaf_{i:05d}.npy")
+
+
+def save(path: str, step: int, tree, keep: int = 3) -> str:
+    """Save pytree ``tree`` at ``path/step_<step>``. Returns the final dir."""
+    leaves, treedef = jax.tree.flatten(tree)
+    final = os.path.join(path, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    dtypes = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        dtypes.append(str(arr.dtype))
+        if arr.dtype == _BF16:
+            arr = arr.view(np.uint16)
+        np.save(_leaf_path(tmp, i), arr)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "dtypes": dtypes,
+        "treedef": str(treedef),
+    }
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _gc(path, keep)
+    return final
+
+
+def _steps(path: str) -> list[int]:
+    if not os.path.isdir(path):
+        return []
+    out = []
+    for name in os.listdir(path):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(path, name, "manifest.msgpack")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def _gc(path: str, keep: int):
+    steps = _steps(path)
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(path, f"step_{s}"), ignore_errors=True)
+
+
+def latest_step(path: str) -> int | None:
+    steps = _steps(path)
+    return steps[-1] if steps else None
+
+
+def restore(path: str, like, step: int | None = None, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: optional matching tree of shardings
+    for placement under a (possibly different) mesh."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {path}")
+    d = os.path.join(path, f"step_{step}")
+    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    leaves_like, treedef = jax.tree.flatten(like)
+    assert manifest["n_leaves"] == len(leaves_like), (
+        f"checkpoint has {manifest['n_leaves']} leaves, expected "
+        f"{len(leaves_like)}")
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves_like))
+    out = []
+    for i, (lk, sh) in enumerate(zip(leaves_like, shard_leaves)):
+        arr = np.load(_leaf_path(d, i))
+        dt = manifest["dtypes"][i]
+        if dt == _BF16:
+            arr = arr.view(jnp.bfloat16)
+        assert tuple(arr.shape) == tuple(lk.shape), (i, arr.shape, lk.shape)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out), step

@@ -1,0 +1,25 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the real single CPU device; only launch/dryrun.py forces 512."""
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ParallelConfig, RunConfig, ShapeConfig
+
+SMOKE_SHAPE = ShapeConfig("smoke", "train", 32, 2)
+SMOKE_PARALLEL = ParallelConfig(attn_q_chunk=16, attn_kv_chunk=16)
+
+
+def smoke_runconfig(arch: str, **over) -> RunConfig:
+    cfg = dataclasses.replace(get_smoke_config(arch), n_patches=8)
+    return RunConfig(model=cfg, shape=SMOKE_SHAPE, parallel=SMOKE_PARALLEL,
+                     total_steps=over.pop("total_steps", 20),
+                     warmup_steps=2, **over)
+
+
+@pytest.fixture
+def tmp_ckpt(tmp_path):
+    return str(tmp_path / "ckpt")

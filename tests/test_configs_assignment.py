@@ -1,0 +1,75 @@
+"""Pin every assigned architecture's config to the assignment table."""
+from __future__ import annotations
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config
+
+# (layers, d_model, heads, kv, d_ff, vocab) + family extras
+ASSIGNED = {
+    "arctic-480b": dict(n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+                        d_ff=4864, vocab_size=32000, moe=True, n_experts=128,
+                        top_k=2, dense_residual=True),
+    "kimi-k2-1t-a32b": dict(n_layers=61, d_model=7168, n_heads=64,
+                            n_kv_heads=8, vocab_size=163840, moe=True,
+                            n_experts=384, top_k=8, d_ff_expert=2048),
+    "jamba-1.5-large-398b": dict(n_layers=72, d_model=8192, n_heads=64,
+                                 n_kv_heads=8, d_ff=24576, vocab_size=65536,
+                                 moe=True, n_experts=16, top_k=2, ssm=True,
+                                 attn_layer_period=8),
+    "granite-3-8b": dict(n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+                         d_ff=12800, vocab_size=49155),
+    "qwen2-7b": dict(n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+                     d_ff=18944, vocab_size=152064, qkv_bias=True),
+    "nemotron-4-15b": dict(n_layers=32, d_model=6144, n_heads=48,
+                           n_kv_heads=8, d_ff=24576, vocab_size=256000,
+                           mlp_act="sq_relu"),
+    "qwen3-14b": dict(n_layers=40, d_model=5120, n_heads=40, n_kv_heads=8,
+                      d_ff=17408, vocab_size=151936, qk_norm=True),
+    "mamba2-1.3b": dict(n_layers=48, d_model=2048, d_ff=0, vocab_size=50280,
+                        ssm=True, d_state=128, attn_layer_period=0),
+    "internvl2-76b": dict(n_layers=80, d_model=8192, n_heads=64,
+                          n_kv_heads=8, d_ff=28672, vocab_size=128256,
+                          vision_stub=True),
+    "musicgen-large": dict(n_layers=48, d_model=2048, n_heads=32,
+                           n_kv_heads=32, d_ff=8192, vocab_size=2048,
+                           n_codebooks=4),
+}
+
+EXPECTED_PARAMS_B = {  # loose sanity bands (billions)
+    "arctic-480b": (400, 560), "kimi-k2-1t-a32b": (900, 1150),
+    "jamba-1.5-large-398b": (330, 450), "granite-3-8b": (7, 10),
+    "qwen2-7b": (6, 9), "nemotron-4-15b": (13, 18),
+    "qwen3-14b": (12, 17), "mamba2-1.3b": (1.1, 1.6),
+    "internvl2-76b": (65, 85),
+    # swiglu MLP (3-matrix) at the assigned d_ff=8192 -> ~3.3B
+    "musicgen-large": (2.5, 3.6),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    for field, want in ASSIGNED[arch].items():
+        assert getattr(cfg, field) == want, (arch, field)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_count_in_expected_band(arch):
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    n = get_config(arch).param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.1f}B outside [{lo}, {hi}]B"
+
+
+def test_moe_active_params():
+    kimi = get_config("kimi-k2-1t-a32b")
+    active = kimi.param_count(active=True) / 1e9
+    assert 25 <= active <= 40, active   # "a32b"
+
+
+def test_shape_cells():
+    assert SHAPES["train_4k"].tokens == 4096 * 256
+    assert SHAPES["prefill_32k"].tokens == 32768 * 32
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1

@@ -1,0 +1,194 @@
+"""Unit + property tests for the DSP model (policies, provision, lifecycle,
+scheduling) — the paper's §3 semantics."""
+from __future__ import annotations
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lifecycle import LifecycleService, TREState
+from repro.core.policy import MgmtPolicy, PolicyEngine
+from repro.core.provision import BILL_UNIT_S, ProvisionService
+from repro.core.scheduling import fcfs, first_fit
+from repro.core.types import Job
+
+
+# ------------------------------------------------------------------ policy
+def test_dr1_fires_on_threshold():
+    eng = PolicyEngine(MgmtPolicy.htc(40, 1.2))
+    # demand 60 vs owned 40: ratio 1.5 > 1.2 -> DR1 = 20
+    assert eng.scan([30, 30], 40) == 20
+    # demand 44 vs owned 40: ratio 1.1 <= 1.2, biggest 30 fits -> nothing
+    assert eng.scan([30, 14], 40) == 0
+
+
+def test_dr2_fires_for_oversized_job():
+    eng = PolicyEngine(MgmtPolicy.htc(40, 2.0))
+    # ratio 64/40 = 1.6 <= 2.0 but biggest job 64 > owned -> DR2 = 24
+    assert eng.scan([64], 40) == 24
+
+
+def test_dr1_has_priority_over_dr2():
+    eng = PolicyEngine(MgmtPolicy.htc(10, 1.2))
+    # ratio 130/10 = 13 > 1.2 -> DR1 = 120 (not DR2 = 90)
+    assert eng.scan([100, 30], 10) == 120
+
+
+def test_release_blocks_lifo_within_idle():
+    eng = PolicyEngine(MgmtPolicy.htc(10, 1.2))
+    eng.granted(30)
+    eng.granted(50)
+    assert eng.release_check(60) == 50       # only the 50 fits
+    assert eng.dynamic_blocks == [30]
+    assert eng.release_check(100) == 30
+    assert eng.release_check(100) == 0        # nothing dynamic left
+
+
+def test_empty_queue_requests_nothing():
+    eng = PolicyEngine(MgmtPolicy.mtc(10, 8.0))
+    assert eng.scan([], 10) == 0
+
+
+@given(st.lists(st.integers(1, 128), max_size=40), st.integers(1, 256))
+def test_policy_request_never_negative(demands, owned):
+    eng = PolicyEngine(MgmtPolicy.htc(10, 1.2))
+    req = eng.scan(demands, owned)
+    assert req >= 0
+    if req:
+        # a grant always covers either the whole backlog or the biggest job
+        assert owned + req in (sum(demands), max(demands))
+
+
+@given(st.lists(st.integers(1, 100), max_size=20), st.integers(0, 500))
+def test_release_never_exceeds_idle_or_blocks(blocks, idle):
+    eng = PolicyEngine(MgmtPolicy.htc(10, 1.2))
+    for b in blocks:
+        eng.granted(b)
+    rel = eng.release_check(idle)
+    assert 0 <= rel <= min(idle, sum(blocks))
+    assert rel + eng.dynamic_total == sum(blocks)
+
+
+# --------------------------------------------------------------- provision
+def test_grant_reject_at_capacity():
+    prov = ProvisionService(capacity=100)
+    assert prov.request("a", 60, 0.0)
+    assert not prov.request("b", 60, 0.0)    # rejected, state unchanged
+    assert prov.total_allocated == 60
+    assert prov.request("b", 40, 0.0)
+
+
+def test_billing_per_started_hour():
+    prov = ProvisionService()
+    prov.request("a", 10, 0.0)
+    prov.release("a", 10, 1800.0)            # half an hour -> billed 1 h
+    assert prov.node_hours("a") == 10
+    prov.request("a", 4, 0.0)
+    prov.release("a", 4, 2 * BILL_UNIT_S + 1)  # 2h+1s -> billed 3 h
+    assert prov.node_hours("a") == 10 + 12
+
+
+def test_partial_release_splits_blocks():
+    prov = ProvisionService()
+    prov.request("a", 10, 0.0)
+    prov.request("a", 20, 0.0)
+    prov.release("a", 25, 3600.0)            # closes 20 + 5 of the 10
+    assert prov.allocated["a"] == 5
+    assert prov.node_hours("a", now=3600.0) == 25 + 5
+
+
+@given(st.lists(st.tuples(st.integers(1, 50), st.booleans()), min_size=1,
+                max_size=30))
+@settings(max_examples=60)
+def test_provision_conservation(ops):
+    """Allocation is conserved: granted - released == allocated, and the
+    ledger bills every lease at least one hour."""
+    prov = ProvisionService(capacity=10_000)
+    granted = released = 0
+    t = 0.0
+    for n, is_release in ops:
+        t += 60.0
+        if is_release and prov.allocated.get("a", 0) >= n:
+            prov.release("a", n, t)
+            released += n
+        elif not is_release:
+            assert prov.request("a", n, t)
+            granted += n
+    assert prov.allocated.get("a", 0) == granted - released
+    assert prov.total_allocated == granted - released
+    assert prov.node_hours("a", now=t) >= granted - released
+    assert prov.adjust_count() == granted + released
+
+
+def test_peak_nodes_per_hour():
+    prov = ProvisionService()
+    prov.request("a", 10, 0.0)
+    prov.request("a", 30, 1800.0)
+    prov.release("a", 40, 7200.0)
+    assert prov.peak_nodes() == 40
+    assert prov.peak_nodes_per_hour(7200.0) == 40
+
+
+# ---------------------------------------------------------------- lifecycle
+def test_tre_lifecycle_happy_path():
+    prov = ProvisionService(capacity=100)
+    svc = LifecycleService(prov)
+    rec = svc.apply("tre-a", "htc", MgmtPolicy.htc(10, 1.2), t=0.0)
+    assert rec.state == TREState.RUNNING
+    assert prov.allocated["tre-a"] == 10
+    svc.destroy("tre-a", t=3600.0)
+    assert rec.state == TREState.INEXISTENT
+    assert prov.allocated["tre-a"] == 0
+
+
+def test_tre_rejected_when_no_capacity():
+    prov = ProvisionService(capacity=5)
+    svc = LifecycleService(prov)
+    rec = svc.apply("tre-a", "htc", MgmtPolicy.htc(10, 1.2), t=0.0)
+    assert rec is None
+    assert svc.tres["tre-a"].state == TREState.INEXISTENT
+
+
+def test_invalid_transition_raises():
+    prov = ProvisionService()
+    svc = LifecycleService(prov)
+    svc.apply("a", "htc", MgmtPolicy.htc(1, 1.0), t=0.0)
+    with pytest.raises(ValueError):
+        svc.apply("a", "htc", MgmtPolicy.htc(1, 1.0), t=1.0)
+    with pytest.raises(ValueError):
+        svc.tres["a"].transition(TREState.PLANNING, 2.0)
+
+
+def test_unknown_kind_rejected():
+    svc = LifecycleService(ProvisionService())
+    with pytest.raises(ValueError):
+        svc.apply("x", "web", MgmtPolicy.htc(1, 1.0), t=0.0)
+
+
+# --------------------------------------------------------------- scheduling
+def _jobs(sizes):
+    return [Job(jid=i, arrival=0.0, runtime=60.0, nodes=n)
+            for i, n in enumerate(sizes)]
+
+
+def test_first_fit_skips_blocked_head():
+    started = first_fit(_jobs([50, 10, 20]), free=30)
+    assert [j.nodes for j in started] == [10, 20]
+
+
+def test_fcfs_blocks_at_head():
+    started = fcfs(_jobs([50, 10, 20]), free=30)
+    assert started == []
+    started = fcfs(_jobs([10, 50, 20]), free=30)
+    assert [j.nodes for j in started] == [10]
+
+
+@given(st.lists(st.integers(1, 64), max_size=30), st.integers(0, 256))
+def test_schedulers_never_oversubscribe(sizes, free):
+    for sched in (first_fit, fcfs):
+        started = sched(_jobs(sizes), free)
+        assert sum(j.nodes for j in started) <= free
+        # started jobs appear in queue order
+        ids = [j.jid for j in started]
+        assert ids == sorted(ids)

@@ -1,0 +1,138 @@
+"""Pallas kernel sweeps vs the ref.py oracles (interpret mode on CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.ref import (
+    decode_attention_ref, flash_attention_ref, moe_gmm_ref, ssd_scan_ref,
+)
+from repro.kernels.ssd_scan import ssd_scan
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "BH,S,Sk,hd,bq,bk,causal",
+    [(2, 128, 128, 64, 32, 32, True),
+     (3, 96, 96, 32, 32, 64, True),
+     (2, 64, 192, 64, 64, 64, False),    # cross-attention shape
+     (1, 200, 200, 16, 64, 64, True),    # ragged (padding path)
+     (4, 32, 32, 128, 32, 32, True)])
+def test_flash_attention_sweep(BH, S, Sk, hd, bq, bk, causal, dtype):
+    q = _rand((BH, S, hd), dtype)
+    k = _rand((BH, Sk, hd), dtype)
+    v = _rand((BH, Sk, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,KVH,hd,S,bs",
+    [(2, 8, 2, 64, 256, 64),
+     (3, 4, 4, 32, 100, 32),     # MHA + ragged
+     (1, 16, 2, 16, 512, 128),
+     (2, 32, 8, 64, 64, 64)])
+def test_decode_attention_sweep(B, H, KVH, hd, S, bs, dtype):
+    q = _rand((B, H, hd), dtype)
+    k = _rand((B, S, KVH, hd), dtype)
+    v = _rand((B, S, KVH, hd), dtype)
+    lengths = jnp.asarray(RNG.integers(1, S + 1, (B,)), jnp.int32)
+    out = decode_attention(q, k, v, lengths, block_s=bs, interpret=True)
+    ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,nh,hp,ng,ds,chunk",
+    [(2, 64, 4, 16, 1, 32, 16),
+     (1, 128, 8, 32, 2, 64, 32),
+     (2, 96, 2, 8, 2, 16, 48),
+     (1, 64, 4, 64, 4, 128, 64)])
+def test_ssd_scan_sweep(B, S, nh, hp, ng, ds, chunk, dtype):
+    x = _rand((B, S, nh, hp), dtype, 0.5)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.3, (B, S, nh)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, (nh,)), jnp.float32)
+    Bg = _rand((B, S, ng, ds), dtype, 0.3)
+    Cg = _rand((B, S, ng, ds), dtype, 0.3)
+    y, st = ssd_scan(x, dt, A, Bg, Cg, chunk=chunk, interpret=True)
+    yr, sr = ssd_scan_ref(x, dt, A, Bg, Cg, chunk=chunk)
+    tol = dict(rtol=2e-4, atol=2e-4) if dtype == jnp.float32 else \
+        dict(rtol=8e-2, atol=8e-2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), **tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr), **tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "E,C,d,f,bc,bf,bd",
+    [(4, 32, 64, 128, 16, 64, 32),
+     (2, 16, 32, 32, 16, 32, 32),
+     (8, 64, 128, 64, 32, 32, 64),
+     (1, 128, 256, 128, 128, 128, 128)])
+def test_moe_gmm_sweep(E, C, d, f, bc, bf, bd, dtype):
+    x = _rand((E, C, d), dtype)
+    w = _rand((E, d, f), dtype, 0.1)
+    out = moe_gmm(x, w, block_c=bc, block_f=bf, block_d=bd, interpret=True)
+    ref = moe_gmm_ref(x, w)
+    tol = dict(rtol=1e-4, atol=1e-4) if dtype == jnp.float32 else \
+        dict(rtol=8e-2, atol=4e-1)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+def test_model_attention_matches_kernel_oracle():
+    """repro.models.attention.chunked_attention (the jit path) must agree
+    with the flash kernel on the same inputs."""
+    from repro.models.attention import chunked_attention, repeat_kv
+    B, S, H, hd = 2, 128, 4, 32
+    q = _rand((B, S, H, hd), jnp.float32)
+    k = _rand((B, S, H, hd), jnp.float32)
+    v = _rand((B, S, H, hd), jnp.float32)
+    model_out = chunked_attention(q, k, v, causal=True, q_chunk=32,
+                                  kv_chunk=32)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kern = flash_attention(qf, kf, vf, causal=True, block_q=32, block_k=32,
+                           interpret=True)
+    kern = kern.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(model_out), np.asarray(kern),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_model_ssd_matches_kernel():
+    """repro.models.ssm.ssd_chunked must agree with the Pallas ssd_scan."""
+    from repro.models.ssm import ssd_chunked
+    B, S, nh, hp, ng, ds, chunk = 2, 64, 4, 16, 1, 32, 16
+    x = _rand((B, S, nh, hp), jnp.float32, 0.5)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.3, (B, S, nh)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, (nh,)), jnp.float32)
+    Bg = _rand((B, S, ng, ds), jnp.float32, 0.3)
+    Cg = _rand((B, S, ng, ds), jnp.float32, 0.3)
+    y_m, st_m = ssd_chunked(x, dt, A, Bg, Cg, chunk)
+    y_k, st_k = ssd_scan(x, dt, A, Bg, Cg, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_m, np.float32), np.asarray(y_k),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_m), np.asarray(st_k),
+                               rtol=2e-4, atol=2e-4)
