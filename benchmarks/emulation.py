@@ -3,6 +3,10 @@
 Both the paper-parameter policies (B40_R1.2 / B80_R1.5 / B10_R8) and the
 policies tuned on *our* traces by the Fig 9-11 sweep procedure are run;
 tables report both so the reproduction and the calibration gap are visible.
+
+Systems resolve through the ``repro.core.registry`` plugin registry (the
+four below are the paper's; registered scenarios beyond the paper, e.g.
+``dawningcloud-backfill``, run through the same ``run_system`` path).
 """
 from __future__ import annotations
 

@@ -1,6 +1,8 @@
 """The paper's experiment end-to-end: consolidate two HTC providers (NASA,
 BLUE) and one MTC provider (Montage) on one cloud platform and compare the
-four usage models (DCS / SSP / DRP / DawningCloud-DSP).
+usage models — the paper's four (DCS / SSP / DRP / DawningCloud-DSP) plus
+any scenario registered with ``repro.core.registry`` (``--all`` runs every
+registered system, e.g. the beyond-paper ``dawningcloud-backfill`` mix).
 
   PYTHONPATH=src python examples/emulate_cloud.py [--policy-set paper|tuned]
 """
@@ -9,6 +11,7 @@ from __future__ import annotations
 import argparse
 
 from repro.core.policy import MgmtPolicy
+from repro.core.registry import available_systems
 from repro.sim import run_system
 from repro.sim.traces import standard_workloads
 
@@ -24,21 +27,25 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--policy-set", default="tuned", choices=list(POLICIES))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--all", action="store_true",
+                    help="run every registered system, not just the paper's")
     args = ap.parse_args()
     wls = standard_workloads(args.seed)
     print("workloads:")
     for wl in wls:
         print(f"  {wl.name:8s} {wl.kind} jobs={len(wl.jobs):5d} "
               f"platform={wl.trace_nodes} util={wl.utilization():.1%}")
+    systems = (available_systems() if args.all
+               else ("dcs", "ssp", "drp", "dawningcloud"))
     results = {}
-    for system in ("dcs", "ssp", "drp", "dawningcloud"):
+    for system in systems:
         results[system] = run_system(
             system, wls, policies=POLICIES[args.policy_set],
             mtc_fixed_nodes=166)
-    print(f"\n{'system':14s} {'total node*h':>12s} {'peak/h':>7s} "
+    print(f"\n{'system':22s} {'total node*h':>12s} {'peak/h':>7s} "
           f"{'adjusts':>8s}")
     for system, res in results.items():
-        print(f"{system:14s} {res.total_node_hours:>12.0f} "
+        print(f"{system:22s} {res.total_node_hours:>12.0f} "
               f"{res.peak_nodes_per_hour:>7d} {res.adjust_count:>8d}")
     dc = results["dawningcloud"].total_node_hours
     print(f"\nDawningCloud saves {1 - dc/results['dcs'].total_node_hours:.1%}"

@@ -1,10 +1,19 @@
 """MTC serving: a Montage-shaped DAG of inference tasks through the
-continuous-batching engine — the MTC TRE's trigger monitor feeds the
-engine only tasks whose dependencies completed.
+continuous-batching engine, driven by the unified DSP control plane.
+
+The ``repro.core.tre.MTCRuntimeEnv`` plays the paper's MTC TRE server: its
+trigger monitor releases a workflow task into the FCFS queue only when every
+dependency has completed, and its scheduler loads ready tasks onto free
+engine slots (1 node = 1 continuous-batching slot). The serving engine is
+just the *driver*: it advances the tick clock, executes decode steps, and
+reports finished requests back to the env — the same driver contract the
+discrete-event emulator and the elastic training controller use.
 
   PYTHONPATH=src python examples/serve_workflow.py
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -12,6 +21,8 @@ import jax
 
 from repro.configs import get_smoke_config
 from repro.configs.base import ParallelConfig
+from repro.core.provision import ProvisionService
+from repro.core.tre import MTCRuntimeEnv, TickClock
 from repro.models.lm import LM
 from repro.serve.engine import Engine, Request
 from repro.sim.traces import montage_like
@@ -26,41 +37,46 @@ def main():
 
     # a small Montage-shaped workflow: each task = one generation request
     wl = montage_like(n_project=6)
-    tasks = {j.jid: j for j in wl.jobs[:40]}
-    children: dict[int, list[int]] = {}
-    ndeps = {}
-    for j in tasks.values():
-        deps = [d for d in j.deps if d in tasks]
-        ndeps[j.jid] = len(deps)
-        for d in deps:
-            children.setdefault(d, []).append(j.jid)
-    ready = [jid for jid, n in ndeps.items() if n == 0]
+    keep = {j.jid for j in wl.jobs[:40]}
+    tasks = {j.jid: dataclasses.replace(
+                 j, deps=tuple(d for d in j.deps if d in keep))
+             for j in wl.jobs[:40]}
     rng = np.random.default_rng(0)
-    done_order = []
-    # trigger monitor loop: admit ready tasks, decode, release dependents
-    pending: list[int] = list(ready)
-    while pending or engine.active:
-        while pending and engine.free:
-            jid = pending.pop(0)
-            toks = rng.integers(1, cfg.vocab_size,
-                                (6, cfg.n_codebooks)).astype(np.int32)
-            engine.admit(Request(rid=jid, tokens=toks, max_new_tokens=4))
+
+    def admit(job):
+        """env launch hook: one free engine slot = the job's node."""
+        toks = rng.integers(1, cfg.vocab_size,
+                            (6, cfg.n_codebooks)).astype(np.int32)
+        ok = engine.admit(Request(rid=job.jid, tokens=toks, max_new_tokens=4))
+        assert ok, "env scheduled beyond free slots"
+
+    clock = TickClock()
+    env = MTCRuntimeEnv("montage-serve", provision=ProvisionService(),
+                        clock=clock, launch=admit,
+                        fixed_nodes=engine.max_batch)
+    env.track(tasks.values())
+    for j in tasks.values():
+        if not j.deps:
+            env.submit(j)               # trigger monitor releases the rest
+
+    # driver loop: decode steps advance the clock; finished requests go back
+    # to the env, which frees slots and chains newly-ready dependents
+    while env.queue or engine.active:
+        clock.advance()
         for req in engine.step():
-            done_order.append(req.rid)
-            for c in children.get(req.rid, ()):
-                ndeps[c] -= 1
-                if ndeps[c] == 0:
-                    pending.append(c)
-    assert len(done_order) == len(tasks), (len(done_order), len(tasks))
+            env.finish(tasks[req.rid])
+    assert env.all_done, (len(env.completed), len(tasks))
+
     # dependencies respected in completion order
+    done_order = [j.jid for j in env.completed]
     pos = {jid: i for i, jid in enumerate(done_order)}
     for j in tasks.values():
         for d in j.deps:
-            if d in tasks:
-                assert pos[d] < pos[j.jid]
+            assert pos[d] < pos[j.jid]
+    env.destroy()
     print(f"served {len(done_order)} workflow tasks in {engine.steps} decode "
-          f"steps (continuous batching, max_batch=4)")
-    print("dependency order respected; MTC TRE trigger-monitor OK")
+          f"steps (continuous batching, max_batch={engine.max_batch})")
+    print("dependency order respected; MTCRuntimeEnv trigger-monitor OK")
 
 
 if __name__ == "__main__":

@@ -4,10 +4,22 @@
 - ``policy``     resource-management policies (B, R, DR1/DR2 semantics)
 - ``provision``  grant-or-reject provision service + lease billing
 - ``lifecycle``  TRE state machine (CSF lifecycle management service)
-- ``scheduling`` first-fit (HTC) and FCFS (MTC) job schedulers
-- ``controller`` bridges DSP decisions to live elastic JAX training jobs
+- ``scheduling`` first-fit (HTC), FCFS (MTC) and conservative-backfill
+                 job schedulers, pluggable via ``SCHEDULERS``
+- ``tre``        the unified RuntimeEnv control plane: queue + trigger
+                 monitor + policy negotiation + idle accounting, shared by
+                 the emulator and the live controller through Clock/driver
+                 protocols
+- ``registry``   pluggable System registry: usage models register by name
+- ``controller`` the live driver: DSP decisions on real elastic JAX jobs
 """
 from repro.core.lifecycle import LifecycleService, TREState  # noqa: F401
 from repro.core.policy import MgmtPolicy, PolicyEngine  # noqa: F401
 from repro.core.provision import ProvisionService  # noqa: F401
+from repro.core.registry import (  # noqa: F401
+    System, available_systems, get_system, register_system,
+)
+from repro.core.tre import (  # noqa: F401
+    Clock, HTCRuntimeEnv, MTCRuntimeEnv, RuntimeEnv, TickClock,
+)
 from repro.core.types import Job, Workload  # noqa: F401

@@ -1,35 +1,45 @@
 """Live elastic controller: DSP policies driving real JAX training jobs.
 
-This is the bridge between the paper's resource-management layer and the
-training substrate. An ``ElasticController`` is the *server* of an HTC TRE
-whose jobs are JAX training runs:
+This is the *live driver* half of the ``repro.core.tre`` split: an
+``ElasticController`` owns execution — building meshes, running optimizer
+steps, checkpoint/restore — while every control decision (queue loading,
+DR1/DR2 grants, idle-averaged releases, lifecycle transitions) comes from
+the very same ``HTCRuntimeEnv`` that the discrete-event emulator drives.
+Where the emulator advances a simulated-seconds clock, the controller
+advances a ``TickClock``: one control tick = ``steps_per_tick`` optimizer
+steps of every running job (the emulator owns wall-clock semantics; the
+live controller owns real work).
 
-  - queued tasks are scheduled first-fit onto the TRE's device allocation,
-  - the same ``PolicyEngine`` used by the emulator scans the queue and
-    negotiates node grants/releases with the ``ProvisionService``
-    (1 node = 1 accelerator here; on the production pod, 1 node = 8 chips),
-  - a *running* job can be elastically resized: the controller checkpoints,
-    rebuilds the mesh with a new ``data``-axis extent, re-places the state
-    (checkpoints are sharding-agnostic) and resumes,
-  - injected preemptions are absorbed by restart-from-latest-checkpoint.
+Per tick, mirroring the emulator's event order (finish events land
+strictly before the boundary they precede; scans come last):
 
-Control runs in *steps* rather than wall seconds: one control tick =
-``steps_per_tick`` optimizer steps of every running job (the emulator owns
-wall-clock semantics; the live controller owns real work).
+  1. tasks that completed last tick are reported via ``env.finish`` —
+     freeing their nodes and (through the env's scheduler) chaining queued
+     work onto them,
+  2. every ``ticks_per_release`` ticks, the env's release check frees
+     dynamic blocks covered by the window's time-averaged idle,
+  3. the env scans the queue and negotiates node grants with the
+     ``ProvisionService`` (1 node = 1 accelerator here; on the production
+     pod, 1 node = 8 chips), then first-fit schedules into free devices,
+  4. beyond-paper elasticity: a *running* job can be resized into spare
+     devices via the env's ``grow``/``shrink`` hooks — the controller
+     checkpoints, rebuilds the mesh with a new ``data``-axis extent,
+     re-places the state (checkpoints are sharding-agnostic) and resumes;
+     injected preemptions are absorbed by restart-from-latest-checkpoint.
 """
 from __future__ import annotations
 
 import math
-import os
 from dataclasses import dataclass, field
 
 import jax
 import numpy as np
 
 from repro.configs.base import RunConfig
-from repro.core.policy import MgmtPolicy, PolicyEngine
+from repro.core.lifecycle import LifecycleService
+from repro.core.policy import MgmtPolicy
 from repro.core.provision import ProvisionService
-from repro.core.scheduling import first_fit
+from repro.core.tre import HTCRuntimeEnv, TickClock
 from repro.data.synthetic import synthetic_batches
 from repro.models.lm import LM
 from repro.train import checkpoint as ckpt
@@ -44,6 +54,11 @@ class TrainTask:
     nodes: int
     num_steps: int
     ckpt_dir: str
+    # estimated duration in control ticks (set by the controller at submit;
+    # the env records it as a release reservation so backfill scheduling
+    # has a profile to work against — restarts make it stale, which the
+    # backfill scheduler treats conservatively)
+    runtime: float | None = None
     # ---- runtime state ----
     steps_done: int = 0
     alloc: int = 0                    # devices currently assigned
@@ -60,34 +75,55 @@ class ElasticController:
     def __init__(self, *, policy: MgmtPolicy, provision: ProvisionService,
                  tre_name: str = "train-tre", devices=None,
                  steps_per_tick: int = 10, ticks_per_release: int = 5,
-                 elastic_grow: bool = True):
-        self.policy_engine = PolicyEngine(policy)
-        self.provision = provision
-        self.name = tre_name
+                 elastic_grow: bool = True,
+                 lifecycle: LifecycleService | None = None, scheduler=None):
         self.devices = list(devices if devices is not None else jax.devices())
+        self.clock = TickClock()
+        self.env = HTCRuntimeEnv(
+            tre_name, provision=provision, clock=self.clock,
+            launch=self._launch, policy=policy, lifecycle=lifecycle,
+            scheduler=scheduler, max_nodes=len(self.devices))
         self.steps_per_tick = steps_per_tick
         self.ticks_per_release = ticks_per_release
         self.elastic_grow = elastic_grow
-        self.queue: list[TrainTask] = []
         self.running: list[TrainTask] = []
         self.finished: list[TrainTask] = []
-        self.owned = policy.initial
-        ok = provision.request(tre_name, policy.initial, 0.0)
-        assert ok, "initial resources rejected"
-        self._tick = 0
-        self._idle_acc = 0.0
+        self._done_last_tick: list[TrainTask] = []
 
     # ----------------------------------------------------------- plumbing
     @property
+    def name(self) -> str:
+        return self.env.name
+
+    @property
+    def queue(self) -> list[TrainTask]:
+        return self.env.queue
+
+    @property
+    def owned(self) -> int:
+        return self.env.owned
+
+    @property
     def busy(self) -> int:
-        return sum(t.alloc for t in self.running)
+        return self.env.busy
 
     @property
     def free(self) -> int:
-        return self.owned - self.busy
+        return self.env.free
+
+    @property
+    def _tick(self) -> int:
+        return int(self.clock.now())
 
     def submit(self, task: TrainTask) -> None:
-        self.queue.append(task)
+        if task.runtime is None:
+            task.runtime = math.ceil(
+                (task.num_steps - task.steps_done) / self.steps_per_tick)
+        self.env.submit(task)
+
+    def _launch(self, task: TrainTask) -> None:
+        task.alloc = task.nodes
+        self.running.append(task)
 
     def _mesh_for(self, n: int):
         if n <= 1:
@@ -125,57 +161,55 @@ class ElasticController:
         task.steps_done = end
 
     def tick(self, *, fail_task: str | None = None) -> None:
-        """One control cycle: schedule -> train -> negotiate resources."""
-        self._tick += 1
-        # 1) DSP scan: the queue's demand may call for more resources
-        req = self.policy_engine.scan([t.nodes for t in self.queue], self.owned)
-        if req > 0:
-            cap = len(self.devices) - self.owned
-            req = min(req, cap)
-            if req > 0 and self.provision.request(self.name, req, self._tick):
-                self.policy_engine.granted(req)
-                self.owned += req
-        # 2) first-fit schedule queued tasks onto free devices
-        for task in first_fit(self.queue, self.free):
-            self.queue.remove(task)
-            task.alloc = task.nodes
-            self.running.append(task)
-        # 3) beyond-paper: grow a running job into spare devices (2x max)
+        """One control cycle: finishes -> release -> scan/schedule -> train."""
+        k = int(self.clock.advance())
+        # 1) report last tick's completions: frees nodes, chains queued work
+        self._flush_done(reschedule=True)
+        # 2) window-end release check on time-averaged idle (env integrates
+        #    free-node time exactly; the tick is the time unit here)
+        if self.ticks_per_release and k % self.ticks_per_release == 0:
+            self.env.release_check()
+        # 3) DSP scan: negotiate growth, then schedule queued tasks
+        self.env.scan()
+        # 4) beyond-paper: grow a running job into spare devices (2x max)
         if self.elastic_grow:
             for task in self.running:
                 grow = task.alloc
-                if self.free >= grow and task.alloc < 2 * task.nodes:
+                if self.env.free >= grow and task.alloc < 2 * task.nodes:
+                    self.env.grow(task, grow)
                     task.alloc += grow
                     task.resizes += 1
-        # 4) run one segment of every running job
+        # 5) run one segment of every running job
         for task in list(self.running):
             self._run_segment(task, fail=(task.name == fail_task))
             if task.done:
                 self.running.remove(task)
-                self.finished.append(task)
-                task.alloc = 0
-        # 5) shrink grown jobs back when the queue needs their devices
-        if self.queue:
+                self._done_last_tick.append(task)
+        # 6) shrink grown jobs back when the queue needs their devices
+        if self.env.queue:
             for task in self.running:
                 if task.alloc > task.nodes:
+                    self.env.shrink(task, task.alloc - task.nodes)
                     task.alloc = task.nodes
                     task.resizes += 1
-        # 6) hourly-analogue release check on averaged idle
-        self._idle_acc += self.free
-        if self._tick % self.ticks_per_release == 0:
-            idle_avg = self._idle_acc / self.ticks_per_release
-            rel = self.policy_engine.release_check(
-                int(min(idle_avg, self.free)))
-            if rel > 0:
-                self.provision.release(self.name, rel, self._tick)
-                self.owned -= rel
-            self._idle_acc = 0.0
+
+    def _flush_done(self, *, reschedule: bool) -> None:
+        for task in self._done_last_tick:
+            task.alloc = 0
+            self.finished.append(task)
+            self.env.finish(task, reschedule=reschedule)
+        self._done_last_tick.clear()
 
     def run(self, *, max_ticks: int = 1000, fail_at: dict | None = None) -> None:
         fail_at = dict(fail_at or {})
-        while (self.queue or self.running) and self._tick < max_ticks:
+        while (self.env.queue or self.running or self._done_last_tick) \
+                and self._tick < max_ticks:
             self.tick(fail_task=fail_at.pop(self._tick + 1, None))
+        # hitting max_ticks must not strand final-tick completions in the
+        # deferred list (unreported to the env = phantom busy nodes);
+        # reschedule=False so the env doesn't launch queued work into a
+        # driver that has stopped ticking
+        self._flush_done(reschedule=False)
 
     def destroy(self) -> None:
-        self.provision.destroy(self.name, self._tick)
-        self.owned = 0
+        self.env.destroy()

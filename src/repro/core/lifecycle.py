@@ -57,12 +57,14 @@ class LifecycleService:
         self.provision = provision
         self.tres: dict[str, TRERecord] = {}
 
-    def apply(self, name: str, kind: str, policy: MgmtPolicy, t: float
-              ) -> TRERecord | None:
+    def apply(self, name: str, kind: str, policy: MgmtPolicy, t: float,
+              *, count_adjust: bool = True) -> TRERecord | None:
         """Service provider applies for a new TRE (steps 1-5 of §3.1.3).
 
         Returns the record in RUNNING state, or None if the platform cannot
-        provision the initial resources (request rejected).
+        provision the initial resources (request rejected). ``count_adjust``
+        mirrors ``ProvisionService.request``: DCS REs own their configuration
+        outright, so deploying one is not a node *adjustment* (§4.5.4).
         """
         if kind not in ("htc", "mtc"):
             raise ValueError(f"unknown workload kind {kind!r}")
@@ -71,7 +73,8 @@ class LifecycleService:
         rec = TRERecord(name, kind, policy)
         self.tres[name] = rec
         rec.transition(TREState.PLANNING, t)          # validated
-        if not self.provision.request(name, policy.initial, t):
+        if not self.provision.request(name, policy.initial, t,
+                                      count_adjust=count_adjust):
             rec.transition(TREState.INEXISTENT, t)    # rejected
             return None
         rec.transition(TREState.CREATED, t)           # deployed
@@ -79,11 +82,13 @@ class LifecycleService:
         rec.created_t = t
         return rec
 
-    def destroy(self, name: str, t: float) -> None:
-        """Destroy a TRE (step 8): withdraw all resources."""
+    def destroy(self, name: str, t: float, *, count_adjust: bool = True) -> None:
+        """Destroy a TRE (step 8): withdraw all resources. As with
+        :meth:`apply`, withdrawing an owned (DCS) configuration is not a
+        node adjustment (§4.5.4) — pass ``count_adjust=False`` there."""
         rec = self.tres[name]
         if rec.state != TREState.RUNNING:
             raise ValueError(f"cannot destroy TRE in state {rec.state}")
-        self.provision.destroy(name, t)
+        self.provision.destroy(name, t, count_adjust=count_adjust)
         rec.transition(TREState.INEXISTENT, t)
         rec.destroyed_t = t

@@ -104,10 +104,10 @@ class ProvisionService:
             self.adjust_events.append(AdjustEvent(t, tre, -n))
         self._record(t)
 
-    def destroy(self, tre: str, t: float) -> None:
+    def destroy(self, tre: str, t: float, *, count_adjust: bool = True) -> None:
         n = self.allocated.get(tre, 0)
         if n:
-            self.release(tre, n, t)
+            self.release(tre, n, t, count_adjust=count_adjust)
 
     # ---------------------------------------------------------- metrics
     def node_hours(self, tre: str | None = None, now: float = 0.0) -> float:

@@ -1,0 +1,308 @@
+"""The unified DSP control plane: one RuntimeEnv, many drivers.
+
+A *TRE* (thin runtime environment, paper §3.1) is the unit DawningCloud
+leases resources to. Before this module existed the TRE server logic was
+implemented twice — once inside the discrete-event emulator
+(``repro.sim.systems.REServer``) and once inside the live JAX controller
+(``repro.core.controller.ElasticController``) — sharing only the pure
+``PolicyEngine``. ``RuntimeEnv`` owns the complete control cycle exactly
+once:
+
+  - **queue + trigger monitor** (§3.2.1): dependency bookkeeping; a task
+    enters the queue only when every dependency has finished,
+  - **scheduler dispatch** (§4.4): first-fit (HTC) / FCFS (MTC) / any
+    ``repro.core.scheduling.SCHEDULERS`` entry, per-TRE overridable,
+  - **policy negotiation** (§3.2.2): ``PolicyEngine`` scan -> DR1/DR2
+    request against the ``ProvisionService``; hourly release checks over
+    *time-averaged* idle,
+  - **idle accounting**: explicit time-integral of free nodes (no lazy
+    ``getattr`` state),
+  - **elastic hooks** (beyond paper): ``grow``/``shrink`` let a live driver
+    resize a running task's allocation while the env keeps busy/free exact,
+  - **lifecycle** (§3.1.3): creation and destruction go through
+    ``LifecycleService``, so every run exercises the
+    inexistent -> planning -> created -> running state machine.
+
+Drivers own *time and execution*, nothing else. A driver supplies
+
+  - a ``Clock`` (``now() -> float``): the emulator's is the simulation
+    clock in seconds; the live controller's is a ``TickClock`` counting
+    control ticks,
+  - a ``launch(task)`` callable: the emulator schedules a finish event
+    ``task.runtime`` later; the live controller actually trains/serves,
+    and calls :meth:`RuntimeEnv.finish` when the task completes,
+  - the cadence: the emulator wires scan/release events onto its event
+    heap; the live controller calls :meth:`scan` / :meth:`release_check`
+    from its tick loop.
+
+``HTCRuntimeEnv`` and ``MTCRuntimeEnv`` fix the paper's per-kind defaults.
+Both the emulator and the live controller are thin shells over these — one
+implementation, two drivers, which is what makes the reproduction a
+framework rather than a simulator.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable, Protocol, runtime_checkable
+
+from repro.core.lifecycle import LifecycleService
+from repro.core.policy import MgmtPolicy, PolicyEngine
+from repro.core.provision import ProvisionService
+from repro.core.scheduling import resolve_scheduler
+
+
+@runtime_checkable
+class Clock(Protocol):
+    """The only notion of time a RuntimeEnv has. Drivers define its unit:
+    seconds (emulator) or control ticks (live controller)."""
+
+    def now(self) -> float: ...
+
+
+class TickClock:
+    """Integer-stepped clock for tick-driven (live) drivers."""
+
+    def __init__(self, start: float = 0.0):
+        self._now = start
+
+    def now(self) -> float:
+        return self._now
+
+    def advance(self, dt: float = 1.0) -> float:
+        self._now += dt
+        return self._now
+
+
+class RuntimeEnv:
+    """Driver-agnostic TRE server: the DSP control cycle, implemented once.
+
+    Modes (mutually exclusive constructor arguments):
+      - ``fixed_nodes=N``: DCS/SSP semantics — the env owns/leases a fixed
+        configuration and never renegotiates; jobs schedule on submission.
+      - ``policy=MgmtPolicy(...)``: DawningCloud semantics — starts at the
+        policy's initial resources ``B`` and renegotiates at every
+        :meth:`scan` / :meth:`release_check` the driver issues.
+    """
+
+    kind = "htc"
+
+    def __init__(self, name: str, *, provision: ProvisionService,
+                 clock: Clock, launch: Callable[[Any], None],
+                 policy: MgmtPolicy | None = None,
+                 fixed_nodes: int | None = None,
+                 scheduler=None, lifecycle: LifecycleService | None = None,
+                 count_adjust: bool = True, max_nodes: int | None = None):
+        if (policy is None) == (fixed_nodes is None):
+            raise ValueError("exactly one of policy / fixed_nodes required")
+        self.name = name
+        self.provision = provision
+        self.clock = clock
+        self._launch = launch
+        self.count_adjust = count_adjust
+        self.max_nodes = max_nodes
+        self.mode = "fixed" if fixed_nodes is not None else "dsp"
+        self.scheduler = resolve_scheduler(scheduler, self.kind)
+        self.engine = PolicyEngine(policy) if policy is not None else None
+        # ---- server state ----
+        self.queue: list[Any] = []
+        self.completed: list[Any] = []
+        self.busy = 0
+        self.destroyed = False
+        # idle accounting: explicit time-integral state (not lazy getattr —
+        # a silent 0.0 default here once hid whole-hour accounting gaps)
+        t0 = clock.now()
+        self._idle_acc = 0.0            # node*time integral of free nodes
+        self._idle_t = t0               # last integration point
+        self._release_t = t0            # start of the current release window
+        # trigger monitor (populated by track())
+        self._expected: int | None = None
+        self._ndeps: dict[int, int] = {}
+        self._children: dict[int, list[Any]] = {}
+        # per-task allocation + projected release profile (for backfill)
+        self._alloc: dict[int, int] = {}
+        self._reserved: dict[int, tuple[float, int]] = {}
+        # ---- lifecycle: §3.1.3 creation path ----
+        eff_policy = policy if policy is not None else \
+            MgmtPolicy(fixed_nodes, 0.0, float("inf"))
+        self.lifecycle = lifecycle or LifecycleService(provision)
+        self.record = self.lifecycle.apply(name, self.kind, eff_policy, t0,
+                                           count_adjust=count_adjust)
+        if self.record is None:
+            raise RuntimeError(
+                f"TRE {name!r}: initial resources rejected by provision")
+        self.owned = eff_policy.initial
+
+    # ------------------------------------------------------------ state
+    @property
+    def free(self) -> int:
+        return self.owned - self.busy
+
+    @property
+    def all_done(self) -> bool:
+        return (self._expected is not None
+                and len(self.completed) == self._expected)
+
+    def _account_idle(self) -> None:
+        """Accumulate the time-integral of idle nodes. The release check
+        frees blocks covered by the *time-averaged* idle of the past window:
+        instantaneous idle thrashes (release->regrant bills a fresh lease
+        hour), whole-window idle ratchets the pool up; average idle tracks
+        the load curve with one window of lag. Call before every change to
+        ``owned`` or ``busy``."""
+        t = self.clock.now()
+        self._idle_acc += self.free * (t - self._idle_t)
+        self._idle_t = t
+
+    # --------------------------------------------------- trigger monitor
+    def track(self, jobs: Iterable[Any]) -> None:
+        """Register a workload's dependency graph with the trigger monitor.
+        Dependency-free jobs must still be submitted by the driver (at their
+        arrival times); dependent jobs are auto-submitted by :meth:`finish`
+        when their last dependency completes."""
+        jobs = list(jobs)
+        self._expected = len(jobs)
+        self._ndeps = {j.jid: len(j.deps) for j in jobs}
+        self._children = {}
+        for j in jobs:
+            for d in j.deps:
+                self._children.setdefault(d, []).append(j)
+
+    def submit(self, task: Any) -> None:
+        task.submit_time = self.clock.now()
+        self.queue.append(task)
+        # DSP envs load jobs at scan ticks (the scan both resizes and loads,
+        # §3.2.2); fixed envs schedule on submission
+        if self.mode == "fixed":
+            self.schedule()
+
+    # --------------------------------------------------------- scheduling
+    def schedule(self) -> list[Any]:
+        """Load the queue onto free nodes; returns (and launches) starts."""
+        started = self.scheduler(
+            self.queue, self.free, now=self.clock.now(),
+            running=tuple(self._reserved.values()), busy=self.busy)
+        for task in started:
+            self.queue.remove(task)
+            task.start = self.clock.now()
+            self._account_idle()
+            self.busy += task.nodes
+            self._alloc[id(task)] = task.nodes
+            runtime = getattr(task, "runtime", None)
+            if runtime is not None:
+                self._reserved[id(task)] = (self.clock.now() + runtime,
+                                            task.nodes)
+            self._launch(task)
+        return started
+
+    def finish(self, task: Any, *, reschedule: bool = True) -> bool:
+        """Driver reports a task completion. Frees its allocation, releases
+        newly-ready dependents into the queue, reschedules. Returns True
+        when the tracked workload is fully complete (driver may destroy).
+        Pass ``reschedule=False`` when the driver is winding down and must
+        not be handed freshly-launched work (e.g. a tick-budget cutoff)."""
+        task.finish = self.clock.now()
+        self._account_idle()
+        self.busy -= self._alloc.pop(id(task), task.nodes)
+        self._reserved.pop(id(task), None)
+        self.completed.append(task)
+        jid = getattr(task, "jid", None)
+        if jid is not None:
+            for child in self._children.get(jid, ()):
+                self._ndeps[child.jid] -= 1
+                if self._ndeps[child.jid] == 0:
+                    self.submit(child)
+        if self.all_done:
+            return True
+        if reschedule:
+            self.schedule()
+        return False
+
+    # ------------------------------------------------------ DSP control
+    def scan(self) -> int:
+        """One DSP scan: negotiate growth with the provision service, then
+        load the queue. Returns the nodes granted (0 = none)."""
+        if self.destroyed:
+            return 0
+        granted = 0
+        if self.engine is not None:
+            req = self.engine.scan([t.nodes for t in self.queue], self.owned)
+            if req > 0 and self.max_nodes is not None:
+                req = min(req, self.max_nodes - self.owned)
+            if req > 0 and self.provision.request(
+                    self.name, req, self.clock.now(),
+                    count_adjust=self.count_adjust):
+                self._account_idle()
+                self.engine.granted(req)
+                self.owned += req
+                granted = req
+        self.schedule()
+        return granted
+
+    def release_check(self) -> int:
+        """Window-end idle check: release every dynamic block covered by the
+        window's time-averaged idle. Returns the nodes released."""
+        if self.destroyed or self.engine is None:
+            return 0
+        self._account_idle()
+        t = self.clock.now()
+        elapsed = t - self._release_t
+        idle_avg = self._idle_acc / elapsed if elapsed > 0 else 0.0
+        rel = self.engine.release_check(int(min(idle_avg, self.free)))
+        if rel > 0:
+            self.provision.release(self.name, rel, t,
+                                   count_adjust=self.count_adjust)
+            self.owned -= rel
+        self._idle_acc = 0.0
+        self._release_t = t
+        return rel
+
+    # ---------------------------------------------------- elastic hooks
+    def grow(self, task: Any, extra: int) -> None:
+        """Beyond-paper: a live driver widens a *running* task into spare
+        nodes (e.g. data-parallel mesh growth). Keeps busy/idle exact."""
+        assert extra <= self.free, (extra, self.free)
+        self._account_idle()
+        self.busy += extra
+        self._alloc[id(task)] = self._alloc.get(id(task), task.nodes) + extra
+        self._adjust_reservation(task, extra)
+
+    def shrink(self, task: Any, n: int) -> None:
+        """Inverse of :meth:`grow`: return ``n`` of the task's nodes."""
+        assert n <= self._alloc.get(id(task), task.nodes), \
+            (n, self._alloc.get(id(task)))
+        self._account_idle()
+        self.busy -= n
+        self._alloc[id(task)] -= n
+        self._adjust_reservation(task, -n)
+
+    def _adjust_reservation(self, task: Any, delta: int) -> None:
+        """Keep the release profile in step with elastic resizes — a grown
+        task frees its whole allocation at its estimated end, and a stale
+        profile would silently degrade backfill scheduling to FCFS."""
+        res = self._reserved.get(id(task))
+        if res is not None:
+            self._reserved[id(task)] = (res[0], res[1] + delta)
+
+    # --------------------------------------------------------- lifecycle
+    def destroy(self, at: float | None = None) -> None:
+        """All work done (or window over): the service provider destroys the
+        TRE — §3.1.3 step 8, withdrawing every lease via the lifecycle
+        service. Billing that depends on a configuration size must read it
+        from the TRE record's policy, not from post-destroy state."""
+        if self.destroyed:
+            return
+        self.destroyed = True
+        self.lifecycle.destroy(self.name,
+                               self.clock.now() if at is None else at,
+                               count_adjust=self.count_adjust)
+        self.owned = 0
+
+
+class HTCRuntimeEnv(RuntimeEnv):
+    """HTC TRE: batch jobs, first-fit scheduling, 60 s scans (§3.2.2.1)."""
+    kind = "htc"
+
+
+class MTCRuntimeEnv(RuntimeEnv):
+    """MTC TRE: workflow tasks under FCFS, 3 s scans (§3.2.2.2); the
+    trigger monitor feeds the queue as dependencies complete."""
+    kind = "mtc"

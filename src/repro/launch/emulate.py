@@ -8,7 +8,7 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.core.policy import MgmtPolicy
+from repro.core.registry import available_systems
 from repro.sim import run_system
 from repro.sim.traces import standard_workloads
 
@@ -16,6 +16,7 @@ from repro.sim.traces import standard_workloads
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--system", nargs="*",
+                    choices=available_systems(),
                     default=["dcs", "ssp", "drp", "dawningcloud"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")

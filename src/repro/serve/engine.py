@@ -7,7 +7,10 @@ new requests join mid-flight — continuous batching. Greedy sampling.
 
 MTC workflows (Montage-style DAGs of inference tasks) are driven by
 ``repro.core.tre.MTCRuntimeEnv``, which feeds this engine only tasks whose
-dependencies completed — the DawningCloud "trigger monitor" role.
+dependencies completed — the DawningCloud "trigger monitor" role. The env
+treats each batching slot as one node; ``examples/serve_workflow.py`` is
+the reference driver wiring (engine steps advance a ``TickClock``, finished
+requests are reported back via ``env.finish``).
 """
 from __future__ import annotations
 

@@ -1,5 +1,8 @@
+from repro.core.registry import available_systems, register_system  # noqa: F401
 from repro.sim.engine import Sim  # noqa: F401
-from repro.sim.systems import SystemResult, WorkloadResult, run_system  # noqa: F401
+from repro.sim.systems import (  # noqa: F401
+    EmulationContext, SystemResult, WorkloadResult, run_system,
+)
 from repro.sim.traces import (  # noqa: F401
     montage_like, nasa_ipsc_like, sdsc_blue_like, standard_workloads,
 )

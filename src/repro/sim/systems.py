@@ -1,166 +1,133 @@
-"""Emulated systems for the four usage models (paper §4.1, Figs 6-8).
+"""Emulated systems for the usage models (paper §4.1, Figs 6-8).
 
-One ``REServer`` implements the runtime-environment server + scheduler +
-trigger monitor; it runs in two modes:
+Since the ``repro.core.tre`` redesign, this module contains no control-plane
+logic of its own: the complete DSP cycle (queue + trigger monitor,
+scheduler dispatch, ``PolicyEngine`` negotiation, time-integral idle
+accounting, lifecycle transitions) lives in ``repro.core.tre.RuntimeEnv``,
+shared verbatim with the live JAX controller. What remains here is the
+*discrete-event driver* side of the split:
 
-  - ``fixed``  (DCS & SSP): the RE owns/leases a fixed-size cluster for the
-    whole workload period. DCS and SSP produce identical performance
-    (paper §4.5.2) and differ only in TCO (benchmarks/tco.py).
-  - ``dsp``    (DawningCloud): the RE starts with the policy's initial
-    resources ``B`` and renegotiates with the provision service via the
-    *same* ``PolicyEngine`` that drives the live elastic JAX controller.
+  - ``REServer`` is a thin shell over ``HTCRuntimeEnv``/``MTCRuntimeEnv``:
+    it owns simulated time — job arrivals, finish events ``runtime`` later,
+    periodic scan/release ticks — and forwards each to the env. Fixed mode
+    (DCS & SSP: the env owns a static configuration for the whole workload
+    period) and dsp mode (DawningCloud: the env renegotiates via the same
+    ``PolicyEngine`` that drives live training) are env modes, not forks.
+  - ``DRPRunner`` models Deelman-style direct resource provision: each HTC
+    job is an end user leasing its own nodes for ceil-hour of its runtime;
+    an MTC workflow is one end-user application whose leased pool grows to
+    its eager (no-queue) execution width and is held until the workflow
+    finishes. No TRE exists, so it bypasses the runtime env by design.
 
-``DRPRunner`` models Deelman-style direct resource provision: each HTC job
-is an end user leasing its own nodes for ceil-hour of its runtime; an MTC
-workflow is one end-user application whose leased pool grows to its eager
-(no-queue) execution width and is held until the workflow finishes.
-
-All billing goes through ``repro.core.provision`` (1-hour lease units).
+Usage models are plugins: each is a ``repro.core.registry.System``
+registered under its name (``dcs`` / ``ssp`` / ``drp`` / ``dawningcloud``,
+plus the beyond-paper ``dawningcloud-backfill`` consolidated scenario), and
+``run_system`` is registry dispatch — a new scenario is a new registered
+class, not an ``elif``. All billing goes through ``repro.core.provision``
+(1-hour lease units); TRE creation/destruction goes through
+``repro.core.lifecycle`` (§3.1.3 state machine).
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
 
-from repro.core.policy import MgmtPolicy, PolicyEngine
+from repro.core.lifecycle import LifecycleService
+from repro.core.policy import MgmtPolicy
 from repro.core.provision import BILL_UNIT_S, ProvisionService
-from repro.core.scheduling import scheduler_for
+from repro.core.registry import System, get_system, register_system
+from repro.core.tre import HTCRuntimeEnv, MTCRuntimeEnv
 from repro.core.types import Job, Workload
 from repro.sim.engine import Sim
 
 
+class SimClock:
+    """Adapts the discrete-event kernel to the ``repro.core.tre.Clock``
+    protocol: env time *is* simulated wall time."""
+
+    def __init__(self, sim: Sim):
+        self._sim = sim
+
+    def now(self) -> float:
+        return self._sim.t
+
+
 # --------------------------------------------------------------------------
-# runtime-environment server (DCS / SSP / DawningCloud)
+# runtime-environment driver (DCS / SSP / DawningCloud)
 # --------------------------------------------------------------------------
 class REServer:
-    def __init__(self, sim: Sim, workload: Workload, provision: ProvisionService,
-                 *, mode: str, fixed_nodes: int | None = None,
+    """Discrete-event driver for one TRE: wires sim time into a RuntimeEnv.
+
+    The driver schedules arrivals, turns ``launch`` into a finish event
+    ``job.runtime`` later, and (dsp mode) fires the env's scan/release
+    cycles at the policy's intervals. Everything else — scheduling,
+    negotiation, idle accounting, lifecycle — happens inside the env.
+    """
+
+    def __init__(self, sim: Sim, workload: Workload,
+                 provision: ProvisionService, *, mode: str,
+                 fixed_nodes: int | None = None,
                  policy: MgmtPolicy | None = None, count_adjust: bool = True,
-                 hold_until: float = 0.0):
+                 hold_until: float = 0.0,
+                 lifecycle: LifecycleService | None = None, scheduler=None):
         assert mode in ("fixed", "dsp")
         self.sim = sim
         self.wl = workload
         self.name = workload.name
-        self.provision = provision
-        self.mode = mode
         self.hold_until = hold_until   # fixed REs persist at least this long
-        self.scheduler = scheduler_for(workload.kind)
-        self.count_adjust = count_adjust
-        self.queue: list[Job] = []
-        self.busy = 0
-        self.completed: list[Job] = []
-        self.destroyed = False
-        # trigger monitor state (MTC): dependency bookkeeping
-        self._ndeps = {j.jid: len(j.deps) for j in workload.jobs}
-        self._children: dict[int, list[Job]] = {}
-        for j in workload.jobs:
-            for d in j.deps:
-                self._children.setdefault(d, []).append(j)
-        # resources
-        if mode == "fixed":
-            assert fixed_nodes is not None
-            self.owned = fixed_nodes
-            ok = provision.request(self.name, fixed_nodes, sim.t,
-                                   count_adjust=count_adjust)
-            assert ok, "fixed RE could not lease its configuration"
-            self.engine = None
-        else:
-            assert policy is not None
-            self.engine = PolicyEngine(policy)
-            self.owned = policy.initial
-            ok = provision.request(self.name, policy.initial, sim.t,
-                                   count_adjust=count_adjust)
-            assert ok, "initial resources rejected"
+        self.fixed_nodes = fixed_nodes  # configuration size (None in dsp)
+        env_cls = HTCRuntimeEnv if workload.kind == "htc" else MTCRuntimeEnv
+        self.env = env_cls(
+            workload.name, provision=provision, clock=SimClock(sim),
+            launch=self._launch, scheduler=scheduler, lifecycle=lifecycle,
+            count_adjust=count_adjust,
+            policy=policy if mode == "dsp" else None,
+            fixed_nodes=fixed_nodes if mode == "fixed" else None)
+        self.env.track(workload.jobs)
+        if mode == "dsp":
             sim.after(policy.scan_interval, self._scan)
             sim.after(policy.release_interval, self._release_check)
         # arrivals: only dependency-free jobs arrive by time; the trigger
         # monitor submits dependent tasks when their last dependency finishes
         for j in workload.jobs:
             if not j.deps:
-                sim.at(j.arrival, self.submit, j)
+                sim.at(j.arrival, self.env.submit, j)
 
-    # ------------------------------------------------------------ server
-    @property
-    def free(self) -> int:
-        return self.owned - self.busy
+    # ------------------------------------------------------ driver hooks
+    def _launch(self, job: Job) -> None:
+        self.sim.after(job.runtime, self._finish, job)
 
-    def _account_idle(self):
-        """Accumulate the time-integral of idle nodes. The hourly release
-        check frees blocks covered by the *time-averaged* idle of the past
-        hour: instantaneous idle thrashes (release->regrant bills a fresh
-        lease hour), whole-hour-idle ratchets the pool up; average idle
-        tracks the load curve with one hour of lag."""
-        t = self.sim.t
-        self._idle_acc = getattr(self, "_idle_acc", 0.0) + \
-            self.free * (t - getattr(self, "_idle_t", t))
-        self._idle_t = t
-
-    def submit(self, job: Job):
-        job.submit_time = self.sim.t
-        self.queue.append(job)
-        # DSP servers schedule at scan ticks (the scan both resizes and
-        # loads jobs, §3.2.2); fixed REs schedule on submission
-        if self.mode == "fixed":
-            self._try_start()
-
-    def _try_start(self):
-        for job in self.scheduler(self.queue, self.free):
-            self.queue.remove(job)
-            job.start = self.sim.t
-            self._account_idle()
-            self.busy += job.nodes
-            self.sim.after(job.runtime, self._finish, job)
-
-    def _finish(self, job: Job):
-        job.finish = self.sim.t
-        self._account_idle()
-        self.busy -= job.nodes
-        self.completed.append(job)
-        # trigger monitor: release newly-ready dependents into the queue
-        for child in self._children.get(job.jid, ()):
-            self._ndeps[child.jid] -= 1
-            if self._ndeps[child.jid] == 0:
-                self.submit(child)
-        if len(self.completed) == len(self.wl.jobs):
+    def _finish(self, job: Job) -> None:
+        if self.env.finish(job):
             # fixed REs (DCS/SSP) hold their configuration for the whole
             # workload period; DSP REs are destroyed once the work is done
-            self.sim.at(max(self.sim.t, self.hold_until), self._destroy)
-        else:
-            self._try_start()
+            self.sim.at(max(self.sim.t, self.hold_until), self.env.destroy)
 
-    # --------------------------------------------------------- dsp loops
-    def _scan(self):
-        if self.destroyed:
+    def _scan(self) -> None:
+        if self.env.destroyed:
             return
-        req = self.engine.scan([j.nodes for j in self.queue], self.owned)
-        if req > 0 and self.provision.request(self.name, req, self.sim.t,
-                                              count_adjust=self.count_adjust):
-            self._account_idle()
-            self.engine.granted(req)
-            self.owned += req
-        self._try_start()
-        self.sim.after(self.engine.policy.scan_interval, self._scan)
+        self.env.scan()
+        self.sim.after(self.env.engine.policy.scan_interval, self._scan)
 
-    def _release_check(self):
-        if self.destroyed:
+    def _release_check(self) -> None:
+        if self.env.destroyed:
             return
-        self._account_idle()
-        interval = self.engine.policy.release_interval
-        idle_avg = getattr(self, "_idle_acc", 0.0) / interval
-        rel = self.engine.release_check(int(min(idle_avg, self.free)))
-        if rel > 0:
-            self.provision.release(self.name, rel, self.sim.t,
-                                   count_adjust=self.count_adjust)
-            self.owned -= rel
-        self._idle_acc = 0.0
-        self.sim.after(self.engine.policy.release_interval, self._release_check)
+        self.env.release_check()
+        self.sim.after(self.env.engine.policy.release_interval,
+                       self._release_check)
 
-    def _destroy(self):
-        """All jobs done: service provider destroys the RE (releases leases)."""
-        if self.destroyed:
-            return
-        self.destroyed = True
-        self.provision.destroy(self.name, self.sim.t)
+    # ------------------------------------------------- env state mirror
+    @property
+    def completed(self) -> list[Job]:
+        return self.env.completed
+
+    @property
+    def owned(self) -> int:
+        return self.env.owned
+
+    @property
+    def destroyed(self) -> bool:
+        return self.env.destroyed
 
 
 # --------------------------------------------------------------------------
@@ -274,57 +241,143 @@ def _collect(system: str, wl: Workload, jobs_done: list[Job],
         mean_wait_s=sum(waits) / len(waits) if waits else 0.0)
 
 
+# --------------------------------------------------------------------------
+# registered usage models
+# --------------------------------------------------------------------------
+@dataclass
+class EmulationContext:
+    """Everything a registered ``System`` needs to build its runners. The
+    billing horizon is NOT context state: ``finalize``/``node_hours``
+    receive the authoritative ``end = max(sim.t, window)`` as a parameter."""
+    sim: Sim
+    provision: ProvisionService
+    lifecycle: LifecycleService
+    policies: dict[str, MgmtPolicy] = field(default_factory=dict)
+    schedulers: dict[str, object] = field(default_factory=dict)
+    mtc_fixed_nodes: int | None = None
+
+
+class _EmulatedSystem(System):
+    """Shared finalize: any TRE still running at the end of the window is
+    destroyed through the lifecycle service (closing its leases at ``end``)."""
+
+    def finalize(self, ctx: EmulationContext, runner, end: float) -> None:
+        if isinstance(runner, REServer) and not runner.destroyed:
+            runner.env.destroy(at=end)
+
+
+@register_system("dcs")
+class DCSSystem(_EmulatedSystem):
+    """Dedicated cluster system: each provider owns a fixed configuration."""
+    count_adjust = False     # owning a cluster is not a node adjustment
+
+    def build(self, ctx: EmulationContext, wl: Workload) -> REServer:
+        nodes = (wl.trace_nodes if wl.kind == "htc"
+                 else (ctx.mtc_fixed_nodes or wl.trace_nodes))
+        return REServer(ctx.sim, wl, ctx.provision, mode="fixed",
+                        fixed_nodes=nodes, count_adjust=self.count_adjust,
+                        hold_until=wl.period, lifecycle=ctx.lifecycle,
+                        scheduler=ctx.schedulers.get(wl.name))
+
+    def node_hours(self, ctx, runner, end) -> float:
+        # paper §4.3: consumption = configuration size x workload period
+        # (the immutable configuration, not post-destroy allocation state)
+        return runner.fixed_nodes * math.ceil(runner.wl.period / BILL_UNIT_S)
+
+
+@register_system("ssp")
+class SSPSystem(DCSSystem):
+    """Static service provision: same fixed configuration, but leased from
+    the cloud — identical performance to DCS (§4.5.2), different TCO and
+    adjustment accounting."""
+    count_adjust = True
+
+
+@register_system("drp")
+class DRPSystem(System):
+    """Direct resource provision: end users lease for themselves; no TRE."""
+
+    def build(self, ctx: EmulationContext, wl: Workload) -> DRPRunner:
+        return DRPRunner(ctx.sim, wl, ctx.provision)
+
+    def node_hours(self, ctx, runner, end) -> float:
+        # sum this workload's end-user leases
+        wl = runner.wl
+        return sum(l.billed_node_hours(end)
+                   for l in ctx.provision.closed_leases
+                   if l.tre.startswith(wl.name + "-u"))
+
+
+@register_system("dawningcloud")
+class DawningCloudSystem(_EmulatedSystem):
+    """The paper's DSP model: elastic TREs negotiating with the provision
+    service under per-provider (B, R) management policies."""
+
+    def default_policy(self, wl: Workload) -> MgmtPolicy:
+        return (MgmtPolicy.htc(40, 1.2) if wl.kind == "htc"
+                else MgmtPolicy.mtc(10, 8.0))
+
+    def default_scheduler(self, wl: Workload):
+        return None                      # paper default for the workload kind
+
+    def build(self, ctx: EmulationContext, wl: Workload) -> REServer:
+        pol = ctx.policies.get(wl.name) or self.default_policy(wl)
+        sched = ctx.schedulers.get(wl.name) or self.default_scheduler(wl)
+        return REServer(ctx.sim, wl, ctx.provision, mode="dsp", policy=pol,
+                        lifecycle=ctx.lifecycle, scheduler=sched)
+
+    def node_hours(self, ctx, runner, end) -> float:
+        return ctx.provision.node_hours(runner.wl.name, now=end)
+
+
+@register_system("dawningcloud-backfill")
+class DawningCloudBackfillSystem(DawningCloudSystem):
+    """Beyond-paper consolidated scenario: the same DSP negotiation, but
+    every HTC TRE schedules with conservative backfill while MTC TREs keep
+    FCFS — a per-TRE scheduler mix the string-dispatch run_system could not
+    express. Explicit ``schedulers={...}`` overrides still win."""
+
+    def default_scheduler(self, wl: Workload):
+        return "backfill" if wl.kind == "htc" else None
+
+
+# --------------------------------------------------------------------------
+# registry-dispatched experiment runner
+# --------------------------------------------------------------------------
 def run_system(system: str, workloads: list[Workload], *,
                policies: dict[str, MgmtPolicy] | None = None,
                capacity: int | None = None,
-               mtc_fixed_nodes: int | None = None) -> SystemResult:
-    """Run one emulated system over consolidated workloads.
+               mtc_fixed_nodes: int | None = None,
+               schedulers: dict[str, object] | None = None) -> SystemResult:
+    """Run one registered system over consolidated workloads.
 
-    system: "dcs" | "ssp" | "drp" | "dawningcloud"
-    policies: workload name -> MgmtPolicy (dawningcloud only)
+    system: any ``repro.core.registry`` name ("dcs" | "ssp" | "drp" |
+        "dawningcloud" | "dawningcloud-backfill" | plugins)
+    policies: workload name -> MgmtPolicy (DSP systems only)
     mtc_fixed_nodes: DCS/SSP configuration for MTC workloads (paper: 166)
+    schedulers: workload name -> scheduler callable or SCHEDULERS key
     """
+    impl = get_system(system)
     workloads = [wl.fresh() for wl in workloads]
     sim = Sim()
     provision = ProvisionService(capacity)
+    lifecycle = LifecycleService(provision)
     window = max(wl.period for wl in workloads)
-    runners = []
-    for wl in workloads:
-        if system in ("dcs", "ssp"):
-            nodes = (wl.trace_nodes if wl.kind == "htc"
-                     else (mtc_fixed_nodes or wl.trace_nodes))
-            runners.append(REServer(sim, wl, provision, mode="fixed",
-                                    fixed_nodes=nodes,
-                                    count_adjust=(system == "ssp"),
-                                    hold_until=wl.period))
-        elif system == "dawningcloud":
-            pol = (policies or {}).get(wl.name) or (
-                MgmtPolicy.htc(40, 1.2) if wl.kind == "htc"
-                else MgmtPolicy.mtc(10, 8.0))
-            runners.append(REServer(sim, wl, provision, mode="dsp", policy=pol))
-        elif system == "drp":
-            runners.append(DRPRunner(sim, wl, provision))
-        else:
-            raise ValueError(system)
+    ctx = EmulationContext(sim=sim, provision=provision, lifecycle=lifecycle,
+                          policies=dict(policies or {}),
+                          schedulers=dict(schedulers or {}),
+                          mtc_fixed_nodes=mtc_fixed_nodes)
+    runners = [impl.build(ctx, wl) for wl in workloads]
     sim.run()
     # fixed REs persist for the whole workload period even after the last job
     end = max(sim.t, window)
     for r in runners:
-        if isinstance(r, REServer) and not r.destroyed:
-            r.provision.destroy(r.name, end)
-            r.destroyed = True
-    per = {}
-    for r in runners:
-        wl = r.wl
-        if system in ("dcs", "ssp"):
-            # paper §4.3: consumption = configuration size x workload period
-            nh = r.owned * math.ceil(wl.period / BILL_UNIT_S)
-        elif isinstance(r, REServer):
-            nh = provision.node_hours(wl.name, now=end)
-        else:  # DRP: sum this workload's end-user leases
-            nh = sum(l.billed_node_hours(end) for l in provision.closed_leases
-                     if l.tre.startswith(wl.name + "-u"))
-        per[wl.name] = _collect(system, wl, r.completed, nh, window)
+        impl.finalize(ctx, r, end)
+    per = {
+        r.wl.name: _collect(system, r.wl, r.completed,
+                            impl.node_hours(ctx, r, end), window)
+        for r in runners
+    }
     total = sum(res.node_hours for res in per.values())
     return SystemResult(
         system=system, per_workload=per, total_node_hours=total,

@@ -8,7 +8,8 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from tests.conftest import given, settings, st
 
 from repro.parallel.compression import _quantize
 

@@ -5,12 +5,13 @@ from __future__ import annotations
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests.conftest import given, settings, st
 
 from repro.core.lifecycle import LifecycleService, TREState
 from repro.core.policy import MgmtPolicy, PolicyEngine
 from repro.core.provision import BILL_UNIT_S, ProvisionService
-from repro.core.scheduling import fcfs, first_fit
+from repro.core.scheduling import backfill, fcfs, first_fit
 from repro.core.types import Job
 
 
@@ -184,10 +185,16 @@ def test_fcfs_blocks_at_head():
     assert [j.nodes for j in started] == [10]
 
 
-@given(st.lists(st.integers(1, 64), max_size=30), st.integers(0, 256))
-def test_schedulers_never_oversubscribe(sizes, free):
-    for sched in (first_fit, fcfs):
-        started = sched(_jobs(sizes), free)
+@given(st.lists(st.integers(1, 64), max_size=30), st.integers(0, 256),
+       st.lists(st.tuples(st.floats(1, 100), st.integers(1, 32)),
+                max_size=8))
+def test_schedulers_never_oversubscribe(sizes, free, running):
+    # a complete release profile so backfill exercises its reservation
+    # math rather than the degrade-to-FCFS guard
+    busy = sum(n for _, n in running)
+    for sched in (first_fit, fcfs, backfill):
+        started = sched(_jobs(sizes), free, now=0.0,
+                        running=tuple(running), busy=busy)
         assert sum(j.nodes for j in started) <= free
         # started jobs appear in queue order
         ids = [j.jid for j in started]

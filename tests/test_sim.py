@@ -5,7 +5,8 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests.conftest import given, settings, st
 
 from repro.core.policy import MgmtPolicy
 from repro.core.provision import ProvisionService
