@@ -10,6 +10,7 @@ four below are the paper's; registered scenarios beyond the paper, e.g.
 """
 from __future__ import annotations
 
+import copy
 import functools
 
 from repro.core.policy import MgmtPolicy
@@ -46,8 +47,7 @@ PAPER_PERF = {
 
 
 @functools.lru_cache(maxsize=None)
-def run_all(policy_set: str = "tuned", seed: int = 0):
-    """Returns {system: SystemResult} for the consolidated experiment."""
+def _run_all_cached(policy_set: str = "tuned", seed: int = 0):
     wls = standard_workloads(seed)
     policies = TUNED_POLICIES if policy_set == "tuned" else PAPER_POLICIES
     return {
@@ -55,6 +55,17 @@ def run_all(policy_set: str = "tuned", seed: int = 0):
                            mtc_fixed_nodes=166)
         for system in SYSTEMS
     }
+
+
+def run_all(policy_set: str = "tuned", seed: int = 0):
+    """Returns {system: SystemResult} for the consolidated experiment.
+
+    The emulation itself is cached, but every caller gets a defensive deep
+    copy: ``SystemResult``/``WorkloadResult`` are mutable dataclasses, and
+    handing the cached instances to multiple callers (tables.py and
+    fig12_14_provider.py share this entry point) would let one report's
+    post-processing silently corrupt another's inputs."""
+    return copy.deepcopy(_run_all_cached(policy_set, seed))
 
 
 def saved_vs_dcs(results, system: str, workload: str) -> float:

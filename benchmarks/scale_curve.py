@@ -1,0 +1,245 @@
+"""Fleet-scale economies-of-scale harness: the paper's headline question
+("do MTC or HTC service providers benefit from the economies of scale?")
+answered at N providers instead of three.
+
+For each provider count N the harness generates a heterogeneous
+``workload_family`` (balanced NASA/BLUE/Montage mix), runs the DCS
+baseline (every provider owns a dedicated cluster) and the multi-tenant
+``dawningcloud-coordinated`` scenario (one shared platform sized at the
+peak *hourly-averaged* aggregate demand, admission queueing, PhoenixCloud
+-style arbitration), and reports the economies-of-scale curve:
+
+  - **platform node-hours per provider** — what the consolidated resource
+    provider must host (capacity x window) divided by N. Statistical
+    multiplexing makes this fall monotonically as N grows, while the DCS
+    baseline per provider is flat: the provider-side economies of scale.
+    Both sides bill over the *workload window*, the paper's §4.3
+    convention (DCS is config x period even though some DCS jobs also
+    finish past the window); completion tails are reported separately as
+    ``max_makespan_h`` so the queueing-delay cost stays visible.
+  - **tenant-billed node-hours per provider** — the Tables 2-4 metric
+    summed over leases; stays well below DCS at every N (tenants keep
+    their DawningCloud savings) at a modest queueing-delay premium that
+    is also reported (makespans, completion).
+  - **peak nodes-per-hour per provider** (Fig 13 at fleet scale).
+
+(N, seed) cells run process-pool parallel. The post-simulation accounting
+(``node_hours`` / ``peak_nodes_per_hour``) dominates at fleet scale, so
+the harness also times the NumPy-vectorized accounting against the
+retained per-lease Python reference (``*_loop``) on an N-provider lease
+ledger and records the speedup per N.
+
+Output: ``BENCH_scale_curve.json`` (CI uploads it as an artifact so the
+perf trajectory accumulates across PRs).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+
+from repro.core.provision import ProvisionService
+from repro.sim.systems import run_system
+from repro.sim.traces import workload_family
+
+
+def family_for(n_providers: int, seed: int, jobs_scale: float):
+    """Balanced mix: one MTC provider per triple (2 HTC + 1 MTC), matching
+    the paper's consolidated workload composition at any N."""
+    n_mtc = max(n_providers // 3, 1) if n_providers >= 3 else 0
+    n_htc = n_providers - n_mtc
+    return workload_family(n_htc, n_mtc, seed=seed, jobs_scale=jobs_scale)
+
+
+def run_cell(args: tuple) -> dict:
+    """One (N, seed) cell: DCS baseline vs coordinated consolidation."""
+    n_providers, seed, jobs_scale = args
+    fam = family_for(n_providers, seed, jobs_scale)
+    t0 = time.perf_counter()
+    dcs = run_system("dcs", fam)
+    t_dcs = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    coord = run_system("dawningcloud-coordinated", fam)
+    t_coord = time.perf_counter() - t0
+    window_h = math.ceil(coord.window_s / 3600.0)
+    n = n_providers
+    completed = sum(r.completed_total for r in coord.per_workload.values())
+    expected = sum(len(wl.jobs) for wl in fam)
+    return {
+        "n_providers": n,
+        "seed": seed,
+        "capacity": coord.capacity,
+        "window_h": window_h,
+        "dcs_total_node_hours": dcs.total_node_hours,
+        "dcs_per_provider": dcs.total_node_hours / n,
+        "coord_platform_node_hours": coord.capacity * window_h,
+        "coord_platform_per_provider": coord.capacity * window_h / n,
+        "coord_billed_node_hours": coord.total_node_hours,
+        "coord_billed_per_provider": coord.total_node_hours / n,
+        "coord_peak_nodes_per_hour": coord.peak_nodes_per_hour,
+        "dcs_peak_nodes_per_hour": dcs.peak_nodes_per_hour,
+        "coord_adjust_count": coord.adjust_count,
+        "completed": completed,
+        "expected": expected,
+        "max_makespan_h": max((r.makespan for r in
+                               coord.per_workload.values()), default=0) / 3600,
+        "wall_s_dcs": t_dcs,
+        "wall_s_coord": t_coord,
+    }
+
+
+# --------------------------------------------------------------------------
+# accounting micro-benchmark: vectorized vs per-lease Python loops
+# --------------------------------------------------------------------------
+def _ledger_for(n_providers: int, seed: int, jobs_scale: float
+                ) -> tuple[ProvisionService, float]:
+    """Replay an N-provider family as an eager per-job lease ledger (the
+    DRP shape: one lease per job) in event order — the densest realistic
+    accounting workload at this N."""
+    fam = family_for(n_providers, seed, jobs_scale)
+    events = []
+    for wl in fam:
+        for j in wl.jobs:
+            end = j.arrival + j.runtime
+            events.append((j.arrival, 0, wl.name, j.nodes))
+            events.append((end, 1, wl.name, j.nodes))
+    events.sort()
+    prov = ProvisionService()
+    for t, kind, name, nodes in events:
+        if kind == 0:
+            prov.request(name, nodes, t)
+        else:
+            prov.release(name, nodes, t)
+    horizon = max(t for t, *_ in events)
+    return prov, horizon
+
+
+def bench_accounting(n_providers: int, seed: int, jobs_scale: float,
+                     repeats: int = 5) -> dict:
+    prov, horizon = _ledger_for(n_providers, seed, jobs_scale)
+
+    def best(fn):
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return min(times)
+
+    nh_vec = best(lambda: prov.node_hours(None, now=horizon))
+    nh_loop = best(lambda: prov.node_hours_loop(None, now=horizon))
+    pk_vec = best(lambda: prov.peak_nodes_per_hour(horizon))
+    pk_loop = best(lambda: prov.peak_nodes_per_hour_loop(horizon))
+    assert prov.node_hours(None, now=horizon) == \
+        prov.node_hours_loop(None, now=horizon)
+    assert prov.peak_nodes_per_hour(horizon) == \
+        prov.peak_nodes_per_hour_loop(horizon)
+    return {
+        "n_providers": n_providers,
+        "leases": len(prov.closed_leases),
+        "alloc_events": len(prov._alloc_curve),
+        "node_hours_vec_s": nh_vec,
+        "node_hours_loop_s": nh_loop,
+        "node_hours_speedup": nh_loop / nh_vec,
+        "peak_vec_s": pk_vec,
+        "peak_loop_s": pk_loop,
+        "peak_speedup": pk_loop / pk_vec,
+        "vectorized_beats_loop": nh_vec < nh_loop and pk_vec < pk_loop,
+    }
+
+
+def summarize(runs: list[dict]) -> list[dict]:
+    """Seed-averaged curve per N."""
+    curve = []
+    for n in sorted({r["n_providers"] for r in runs}):
+        cell = [r for r in runs if r["n_providers"] == n]
+        k = len(cell)
+        mean = lambda key: sum(r[key] for r in cell) / k  # noqa: E731
+        curve.append({
+            "n_providers": n,
+            "seeds": k,
+            "dcs_per_provider": mean("dcs_per_provider"),
+            "coord_platform_per_provider": mean("coord_platform_per_provider"),
+            "coord_billed_per_provider": mean("coord_billed_per_provider"),
+            "platform_vs_dcs": (mean("coord_platform_per_provider")
+                                / mean("dcs_per_provider")),
+            "billed_vs_dcs": (mean("coord_billed_per_provider")
+                              / mean("dcs_per_provider")),
+            "coord_peak_per_provider": mean("coord_peak_nodes_per_hour") / n,
+            "completed_fraction": (sum(r["completed"] for r in cell)
+                                   / max(sum(r["expected"] for r in cell), 1)),
+            "mean_wall_s_coord": mean("wall_s_coord"),
+        })
+    return curve
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--providers", type=int, nargs="+",
+                    default=[3, 6, 12, 24])
+    ap.add_argument("--seeds", type=int, nargs="+", default=[0, 100])
+    ap.add_argument("--jobs-scale", type=float, default=1.0)
+    ap.add_argument("--procs", type=int, default=None,
+                    help="process-pool width (default: cpu count)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep: fewer jobs, one seed")
+    ap.add_argument("--out", default="BENCH_scale_curve.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.providers = [3, 6, 8]
+        args.seeds = [0]
+        args.jobs_scale = 0.25
+
+    cells = [(n, s, args.jobs_scale)
+             for n in args.providers for s in args.seeds]
+    procs = args.procs or min(len(cells), os.cpu_count() or 1)
+    t0 = time.perf_counter()
+    if procs > 1:
+        with ProcessPoolExecutor(max_workers=procs) as pool:
+            runs = list(pool.map(run_cell, cells))
+    else:
+        runs = [run_cell(c) for c in cells]
+    wall = time.perf_counter() - t0
+
+    # accounting timing at N=8 (the acceptance point) + the sweep extremes
+    acct_ns = sorted({8, min(args.providers), max(args.providers)})
+    accounting = [bench_accounting(n, args.seeds[0], args.jobs_scale)
+                  for n in acct_ns]
+
+    out = {
+        "benchmark": "scale_curve",
+        "config": {"providers": args.providers, "seeds": args.seeds,
+                   "jobs_scale": args.jobs_scale, "procs": procs,
+                   "smoke": args.smoke},
+        "wall_s_total": wall,
+        "runs": runs,
+        "curve": summarize(runs),
+        "accounting": accounting,
+    }
+    with open(args.out, "w") as fh:
+        json.dump(out, fh, indent=2)
+
+    print(f"wrote {args.out} ({len(runs)} runs, {wall:.1f}s wall, "
+          f"{procs} procs)")
+    print(f"{'N':>4s} {'dcs/prov':>10s} {'platform/prov':>14s} "
+          f"{'billed/prov':>12s} {'plat/dcs':>9s} {'done':>6s}")
+    for row in out["curve"]:
+        print(f"{row['n_providers']:>4d} {row['dcs_per_provider']:>10.0f} "
+              f"{row['coord_platform_per_provider']:>14.0f} "
+              f"{row['coord_billed_per_provider']:>12.0f} "
+              f"{row['platform_vs_dcs']:>9.3f} "
+              f"{row['completed_fraction']:>6.1%}")
+    for a in accounting:
+        print(f"accounting N={a['n_providers']}: node_hours "
+              f"{a['node_hours_speedup']:.1f}x, peak "
+              f"{a['peak_speedup']:.1f}x over per-lease loops "
+              f"({a['leases']} leases)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -58,22 +58,46 @@ class PolicyEngine:
         self.dynamic_blocks: list[int] = []
 
     # ------------------------------------------------------------- scan
+    def scan_request(self, queued_demands: Sequence[int],
+                     owned: int) -> tuple[int, int]:
+        """(nodes to request, minimum useful grant) for the current queue.
+
+        A grant is *useful* only if it can put at least one queued job on
+        nodes; anything smaller sits idle until the hourly release check
+        reclaims it (thrash that bills a fresh lease-hour per cycle). For
+        a DR1 backlog the floor is what the narrowest queued job would
+        need even if everything owned were free (1 when it already fits
+        inside owned — the grant then relieves genuine contention); DR2
+        exists to fit one job wider than everything owned, so it is
+        all-or-nothing.
+        """
+        if not queued_demands:
+            return 0, 0
+        demand = sum(queued_demands)
+        biggest = max(queued_demands)
+        ratio = demand / max(owned, 1)
+        if ratio > self.policy.ratio and demand > owned:
+            floor = max(1, min(queued_demands) - owned)
+            return demand - owned, floor     # DR1: divisible down to floor
+        if biggest > owned:
+            return biggest - owned, biggest - owned   # DR2: indivisible
+        return 0, 0
+
     def scan(self, queued_demands: Sequence[int], owned: int) -> int:
         """Nodes to request right now (0 = no action).
 
         queued_demands: per-job node demands of everything in the queue.
         """
+        return self.scan_request(queued_demands, owned)[0]
+
+    def urgency(self, queued_demands: Sequence[int], owned: int) -> float:
+        """The §3.2.2.1 *ratio of obtaining resources* (queued demand over
+        owned) as a cross-TRE arbitration priority: a coordinated provider
+        (``repro.core.provider.CoordinatedPolicy``) serves the most
+        oversubscribed tenant first when simultaneous requests contend."""
         if not queued_demands:
-            return 0
-        demand = sum(queued_demands)
-        biggest = max(queued_demands)
-        owned = max(owned, 1)
-        ratio = demand / owned
-        if ratio > self.policy.ratio and demand > owned:
-            return demand - owned            # DR1
-        if biggest > owned:
-            return biggest - owned           # DR2
-        return 0
+            return 0.0
+        return sum(queued_demands) / max(owned, 1)
 
     def granted(self, n: int) -> None:
         if n > 0:

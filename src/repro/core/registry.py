@@ -33,10 +33,29 @@ class System:
     """
 
     name: str = ""
+    #: route runs through a multi-tenant ``ResourceProvider`` with this
+    #: coordination policy ("first-come" / "coordinated" / a
+    #: ``CoordinationPolicy`` instance); None = the paper's plain
+    #: grant-or-reject ``ProvisionService``
+    coordination: Any = None
 
     def build(self, ctx: Any, workload: Any) -> Any:
         """Create and wire this system's runner for one workload."""
         raise NotImplementedError
+
+    # ---- multi-tenant platform defaults (used when the caller does not
+    # ---- pass capacity/quotas/reservations explicitly) ----
+    def default_capacity(self, workloads: Any, policies: Any) -> int | None:
+        """Shared platform size for these tenants (None = unbounded)."""
+        return None
+
+    def default_quotas(self, workloads: Any, policies: Any) -> dict | None:
+        """Per-TRE hard allocation caps (None = uncapped)."""
+        return None
+
+    def default_reservations(self, workloads: Any) -> dict | None:
+        """Per-TRE guaranteed minimum capacity (None = none)."""
+        return None
 
     def finalize(self, ctx: Any, runner: Any, end: float) -> None:
         """Hook after the run completes (e.g. destroy surviving TREs)."""

@@ -12,9 +12,15 @@ once:
     enters the queue only when every dependency has finished,
   - **scheduler dispatch** (§4.4): first-fit (HTC) / FCFS (MTC) / any
     ``repro.core.scheduling.SCHEDULERS`` entry, per-TRE overridable,
-  - **policy negotiation** (§3.2.2): ``PolicyEngine`` scan -> DR1/DR2
-    request against the ``ProvisionService``; hourly release checks over
-    *time-averaged* idle,
+  - **policy negotiation** (§3.2.2): ``PolicyEngine`` scan -> a DR1/DR2
+    ``ResourceRequest`` submitted to the provision service. A plain
+    ``ProvisionService`` answers grant-or-reject inline (the paper's
+    §3.2.2.3 policy); a multi-tenant ``repro.core.provider.
+    ResourceProvider`` may instead *park* the request in its admission
+    queue — the env then amends it with the live deficit at every scan
+    and the deferred grant lands through the ``on_grant`` callback when
+    another tenant's release frees capacity. Hourly release checks run
+    over *time-averaged* idle,
   - **idle accounting**: explicit time-integral of free nodes (no lazy
     ``getattr`` state),
   - **elastic hooks** (beyond paper): ``grow``/``shrink`` let a live driver
@@ -120,6 +126,11 @@ class RuntimeEnv:
         # per-task allocation + projected release profile (for backfill)
         self._alloc: dict[int, int] = {}
         self._reserved: dict[int, tuple[float, int]] = {}
+        # DR1/DR2 negotiation in flight: a multi-tenant provider may park
+        # the request in its admission queue instead of rejecting it; while
+        # one is parked the env amends it at each scan rather than
+        # re-submitting (double-queueing would double-grant)
+        self._pending_req = None
         # ---- lifecycle: §3.1.3 creation path ----
         eff_policy = policy if policy is not None else \
             MgmtPolicy(fixed_nodes, 0.0, float("inf"))
@@ -217,25 +228,75 @@ class RuntimeEnv:
         return False
 
     # ------------------------------------------------------ DSP control
+    def _deficit(self, demands: list[int] | None = None) -> tuple[int, int]:
+        """(current DR1/DR2 need, minimum useful grant) per the policy
+        engine, capped by the driver's node ceiling. When the ceiling cuts
+        the need below its useful floor (e.g. a DR2 for a job wider than
+        the driver will ever own), the request is suppressed entirely —
+        nodes granted below the floor could never run the job and would
+        idle-thrash through the hourly release checks."""
+        if demands is None:
+            demands = [t.nodes for t in self.queue]
+        need, min_useful = self.engine.scan_request(demands, self.owned)
+        if need > 0 and self.max_nodes is not None:
+            need = min(need, self.max_nodes - self.owned)
+        if need < min_useful:
+            return 0, 0
+        return need, min_useful
+
+    def _apply_grant(self, offer: int, t: float) -> int:
+        """Grant callback for the provision service: validate the offer
+        against the *live* deficit (a parked request's need may have
+        drained while it queued), commit the accepted nodes, and load the
+        queue onto them. Returns the nodes accepted — the provider opens
+        the lease for exactly that amount, so a stale deferred grant can
+        never push nodes onto a TRE that no longer wants them."""
+        if self.destroyed or self.engine is None:
+            return 0
+        need, min_useful = self._deficit()
+        take = min(offer, need)
+        if take <= 0 or take < min_useful:
+            # below the useful floor (e.g. a partial DR2 would idle until
+            # the release check thrashes it): decline. The provider keeps
+            # a declined request parked, so the pending handle stays — the
+            # next scan amends it to the live deficit (or cancels it)
+            return 0
+        self._account_idle()
+        self.engine.granted(take)
+        self.owned += take
+        self.schedule()
+        return take
+
     def scan(self) -> int:
         """One DSP scan: negotiate growth with the provision service, then
-        load the queue. Returns the nodes granted (0 = none)."""
+        load the queue. Returns the nodes granted during this call (a
+        deferred request granted later lands through :meth:`_apply_grant`
+        when the provider's admission queue drains)."""
         if self.destroyed:
             return 0
-        granted = 0
+        owned_before = self.owned
         if self.engine is not None:
-            req = self.engine.scan([t.nodes for t in self.queue], self.owned)
-            if req > 0 and self.max_nodes is not None:
-                req = min(req, self.max_nodes - self.owned)
-            if req > 0 and self.provision.request(
-                    self.name, req, self.clock.now(),
-                    count_adjust=self.count_adjust):
-                self._account_idle()
-                self.engine.granted(req)
-                self.owned += req
-                granted = req
+            demands = [task.nodes for task in self.queue]
+            need, min_useful = self._deficit(demands)
+            t = self.clock.now()
+            pending = self._pending_req
+            urgency = self.engine.urgency(demands, self.owned)
+            if pending is not None and pending.status == "queued":
+                # refresh the parked request with the live deficit and
+                # urgency; the amend may complete it immediately (a
+                # smaller need now fits)
+                self.provision.amend(pending, need, t, min_useful,
+                                     priority=urgency)
+                if pending.status != "queued":
+                    self._pending_req = None
+            elif need > 0:
+                req = self.provision.submit_request(
+                    self.name, need, t, on_grant=self._apply_grant,
+                    count_adjust=self.count_adjust, priority=urgency,
+                    min_useful=min_useful)
+                self._pending_req = req if req.status == "queued" else None
         self.schedule()
-        return granted
+        return self.owned - owned_before
 
     def release_check(self) -> int:
         """Window-end idle check: release every dynamic block covered by the
@@ -248,9 +309,14 @@ class RuntimeEnv:
         idle_avg = self._idle_acc / elapsed if elapsed > 0 else 0.0
         rel = self.engine.release_check(int(min(idle_avg, self.free)))
         if rel > 0:
+            # shrink owned BEFORE telling the provider: a multi-tenant
+            # release drains the admission queue inline, which may re-grant
+            # the freed nodes to this very env's parked request — its
+            # deficit must be computed against the post-release pool, or
+            # busy can end up exceeding owned
+            self.owned -= rel
             self.provision.release(self.name, rel, t,
                                    count_adjust=self.count_adjust)
-            self.owned -= rel
         self._idle_acc = 0.0
         self._release_t = t
         return rel
@@ -282,6 +348,19 @@ class RuntimeEnv:
         if res is not None:
             self._reserved[id(task)] = (res[0], res[1] + delta)
 
+    def cancel_pending(self, at: float | None = None, *,
+                       drain: bool = True) -> None:
+        """Withdraw any parked DR1/DR2 request. ``drain=False`` detaches
+        without letting the provider serve other tenants from the drain —
+        required when tearing down a whole experiment (a grant landing
+        between two finalize destroys would open a zero-duration lease
+        billed a whole hour)."""
+        if self._pending_req is not None:
+            self.provision.cancel(self._pending_req,
+                                  self.clock.now() if at is None else at,
+                                  drain=drain)
+            self._pending_req = None
+
     # --------------------------------------------------------- lifecycle
     def destroy(self, at: float | None = None) -> None:
         """All work done (or window over): the service provider destroys the
@@ -291,6 +370,7 @@ class RuntimeEnv:
         if self.destroyed:
             return
         self.destroyed = True
+        self.cancel_pending(at)
         self.lifecycle.destroy(self.name,
                                self.clock.now() if at is None else at,
                                count_adjust=self.count_adjust)

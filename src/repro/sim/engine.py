@@ -15,8 +15,15 @@ from typing import Callable
 class Sim:
     def __init__(self):
         self.t = 0.0
+        self.last_event_t = 0.0   # time of the last event actually fired
         self._heap: list = []
         self._seq = 0
+
+    @property
+    def drained(self) -> bool:
+        """True when every scheduled event has fired (the run ended on its
+        own rather than being cut off at a ``run(until=...)`` bound)."""
+        return not self._heap
 
     def at(self, t: float, fn: Callable, *args) -> None:
         assert t >= self.t - 1e-9, (t, self.t)
@@ -37,6 +44,7 @@ class Sim:
         while self._heap and self._heap[0][0] <= until:
             t, _, fn, args = heapq.heappop(self._heap)
             self.t = t
+            self.last_event_t = t
             fn(*args)
         if math.isfinite(until):
             self.t = max(self.t, until)

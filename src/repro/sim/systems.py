@@ -21,19 +21,26 @@ shared verbatim with the live JAX controller. What remains here is the
 
 Usage models are plugins: each is a ``repro.core.registry.System``
 registered under its name (``dcs`` / ``ssp`` / ``drp`` / ``dawningcloud``,
-plus the beyond-paper ``dawningcloud-backfill`` consolidated scenario), and
-``run_system`` is registry dispatch — a new scenario is a new registered
-class, not an ``elif``. All billing goes through ``repro.core.provision``
-(1-hour lease units); TRE creation/destruction goes through
-``repro.core.lifecycle`` (§3.1.3 state machine).
+plus the beyond-paper ``dawningcloud-backfill``, and the multi-tenant
+``dawningcloud-coordinated`` / ``dawningcloud-quota`` scenarios that route
+through ``repro.core.provider.ResourceProvider`` — shared finite capacity,
+admission queueing, PhoenixCloud-style coordination), and ``run_system`` is
+registry dispatch — a new scenario is a new registered class, not an
+``elif``. All billing goes through ``repro.core.provision`` (1-hour lease
+units); TRE creation/destruction goes through ``repro.core.lifecycle``
+(§3.1.3 state machine).
 """
 from __future__ import annotations
 
 import math
+import zlib
 from dataclasses import dataclass, field
+
+import numpy as np
 
 from repro.core.lifecycle import LifecycleService
 from repro.core.policy import MgmtPolicy
+from repro.core.provider import ResourceProvider
 from repro.core.provision import BILL_UNIT_S, ProvisionService
 from repro.core.registry import System, get_system, register_system
 from repro.core.tre import HTCRuntimeEnv, MTCRuntimeEnv
@@ -69,7 +76,8 @@ class REServer:
                  fixed_nodes: int | None = None,
                  policy: MgmtPolicy | None = None, count_adjust: bool = True,
                  hold_until: float = 0.0,
-                 lifecycle: LifecycleService | None = None, scheduler=None):
+                 lifecycle: LifecycleService | None = None, scheduler=None,
+                 phase: float = 0.0):
         assert mode in ("fixed", "dsp")
         self.sim = sim
         self.wl = workload
@@ -85,8 +93,16 @@ class REServer:
             fixed_nodes=fixed_nodes if mode == "fixed" else None)
         self.env.track(workload.jobs)
         if mode == "dsp":
-            sim.after(policy.scan_interval, self._scan)
-            sim.after(policy.release_interval, self._release_check)
+            # phase in [0, 1) staggers this TRE's control cycles within
+            # their intervals. The paper's single-tenant runs keep phase 0
+            # (every cycle on the global grid — bit-for-bit with PR 1);
+            # multi-tenant scenarios spread tenants out so scans/releases
+            # do not collide at identical instants — and a parked
+            # admission-queue request then waits O(interval/N) for the
+            # next tenant's release instead of a whole synchronized window
+            sim.after((1.0 + phase) * policy.scan_interval, self._scan)
+            sim.after((1.0 + phase) * policy.release_interval,
+                      self._release_check)
         # arrivals: only dependency-free jobs arrive by time; the trigger
         # monitor submits dependent tasks when their last dependency finishes
         for j in workload.jobs:
@@ -219,6 +235,7 @@ class SystemResult:
     adjust_count: int
     setup_overhead_s: float
     window_s: float
+    capacity: int | None = None        # shared platform size (None = unbounded)
 
     @property
     def overhead_s_per_hour(self) -> float:
@@ -248,7 +265,9 @@ def _collect(system: str, wl: Workload, jobs_done: list[Job],
 class EmulationContext:
     """Everything a registered ``System`` needs to build its runners. The
     billing horizon is NOT context state: ``finalize``/``node_hours``
-    receive the authoritative ``end = max(sim.t, window)`` as a parameter."""
+    receive the authoritative ``end`` (the run's last fired event — or the
+    horizon cutoff when the run was cut off — floored at the workload
+    window) as a parameter."""
     sim: Sim
     provision: ProvisionService
     lifecycle: LifecycleService
@@ -320,11 +339,15 @@ class DawningCloudSystem(_EmulatedSystem):
     def default_scheduler(self, wl: Workload):
         return None                      # paper default for the workload kind
 
+    def default_phase(self, wl: Workload) -> float:
+        return 0.0                       # paper: every cycle on the grid
+
     def build(self, ctx: EmulationContext, wl: Workload) -> REServer:
         pol = ctx.policies.get(wl.name) or self.default_policy(wl)
         sched = ctx.schedulers.get(wl.name) or self.default_scheduler(wl)
         return REServer(ctx.sim, wl, ctx.provision, mode="dsp", policy=pol,
-                        lifecycle=ctx.lifecycle, scheduler=sched)
+                        lifecycle=ctx.lifecycle, scheduler=sched,
+                        phase=self.default_phase(wl))
 
     def node_hours(self, ctx, runner, end) -> float:
         return ctx.provision.node_hours(runner.wl.name, now=end)
@@ -342,35 +365,186 @@ class DawningCloudBackfillSystem(DawningCloudSystem):
 
 
 # --------------------------------------------------------------------------
+# multi-tenant scenarios (the economies-of-scale axis)
+# --------------------------------------------------------------------------
+def _aggregate_demand_events(workloads: list[Workload]):
+    """(sorted times, demand levels) of the summed eager-execution demand
+    across all tenants (HTC jobs at their trace arrivals/durations; a
+    workflow TRE counts as its configured width over its period)."""
+    ts, deltas = [], []
+    for wl in workloads:
+        if wl.kind == "htc":
+            arr = np.array([j.arrival for j in wl.jobs])
+            rt = np.array([j.runtime for j in wl.jobs])
+            nd = np.array([j.nodes for j in wl.jobs])
+            ts.append(arr)
+            deltas.append(nd)
+            ts.append(arr + rt)
+            deltas.append(-nd)
+        else:
+            ts.append(np.array([0.0, wl.period]))
+            deltas.append(np.array([wl.trace_nodes, -wl.trace_nodes]))
+    t = np.concatenate(ts)
+    d = np.concatenate(deltas)
+    order = np.argsort(t, kind="stable")
+    return t[order], np.cumsum(d[order])
+
+
+def aggregate_demand_peak(workloads: list[Workload]) -> int:
+    """Instantaneous peak of the summed eager-execution demand — the sum
+    of per-tenant peaks grows linearly with the tenant count, but
+    independent bursts do not align, so the peak of the sum grows
+    sublinearly (statistical multiplexing)."""
+    _, levels = _aggregate_demand_events(workloads)
+    return int(levels.max())
+
+
+def aggregate_hourly_peak(workloads: list[Workload]) -> int:
+    """Peak *hourly-averaged* aggregate demand — the Fig 13 "nodes per
+    hour" notion applied to the whole tenant fleet. This is the capacity a
+    consolidated platform must host to serve every hour's average load:
+    sub-hour bursts are buffered by the admission queue instead of being
+    provisioned for, so the per-provider platform size falls as tenants
+    consolidate (the economies-of-scale curve), while the sustained
+    (week-scale, diurnal) plateaus every tenant shares stay fully covered
+    — which is what keeps queueing delay bounded and tenants' workloads
+    completing on schedule."""
+    t, levels = _aggregate_demand_events(workloads)
+    horizon = max(float(t.max()), max(wl.period for wl in workloads))
+    # cumulative integral of the demand step function at event times, then
+    # per-hour means via interpolation onto the hour grid
+    t = np.concatenate([[0.0], t])
+    levels = np.concatenate([[0], levels])
+    integral = np.concatenate(
+        [[0.0], np.cumsum(levels[:-1] * np.diff(t))])
+    edges = np.arange(0.0, horizon + BILL_UNIT_S, BILL_UNIT_S)
+    idx = np.searchsorted(t, edges, side="right") - 1
+    at_edges = integral[idx] + levels[idx] * (edges - t[idx])
+    hourly_mean = np.diff(at_edges) / BILL_UNIT_S
+    return int(math.ceil(float(hourly_mean.max())))
+
+
+@register_system("dawningcloud-coordinated")
+class DawningCloudCoordinatedSystem(DawningCloudSystem):
+    """PhoenixCloud-style consolidated scenario (arXiv:1006.1401): N DSP
+    TREs share one *finite* platform sized at the aggregate demand peak
+    (statistical multiplexing), simultaneous DR1/DR2 requests are
+    arbitrated together by the coordinated policy, and deferred requests
+    park in the provider's admission queue until another tenant's release
+    frees capacity. At small N the shared capacity is an outlier far above
+    typical demand and every request is served whole (DawningCloud
+    semantics); as N grows the aggregate demand concentrates, the platform
+    runs closer to its capacity, and burst requests get trimmed to fair
+    shares — which is exactly where the per-provider consumption saving
+    (the economies of scale) comes from."""
+
+    coordination = "coordinated"
+
+    def default_phase(self, wl: Workload) -> float:
+        # deterministic per-tenant stagger (crc32: stable across processes,
+        # unlike str hash) so N tenants' scans/releases interleave instead
+        # of colliding at identical instants
+        return (zlib.crc32(wl.name.encode()) % 997) / 997.0
+
+    def default_capacity(self, workloads, policies) -> int:
+        hourly = aggregate_hourly_peak(workloads)
+        # liveness floor: when every tenant is back at its initial B, the
+        # widest single job must still fit (else a DR2 can starve forever);
+        # and creation must never be rejected (all Bs fit with margin)
+        sum_b = sum((policies.get(wl.name) or self.default_policy(wl)).initial
+                    for wl in workloads)
+        widest = max(j.nodes for wl in workloads for j in wl.jobs)
+        return max(hourly, sum_b + widest, math.ceil(1.25 * sum_b))
+
+
+@register_system("dawningcloud-quota")
+class DawningCloudQuotaSystem(DawningCloudSystem):
+    """Per-tenant quota scenario: first-come provisioning (the paper's
+    arrival-order semantics) on a shared platform, but no TRE may lease
+    beyond its original dedicated-cluster size — the provider-side guard
+    that one tenant's burst cannot crowd the platform (§3.2.2.3's provision
+    policy parameterized per tenant)."""
+
+    coordination = "first-come"
+
+    def default_quotas(self, workloads, policies) -> dict[str, int]:
+        return {wl.name: max(
+            wl.trace_nodes,
+            (policies.get(wl.name) or self.default_policy(wl)).initial)
+            for wl in workloads}
+
+
+# --------------------------------------------------------------------------
 # registry-dispatched experiment runner
 # --------------------------------------------------------------------------
 def run_system(system: str, workloads: list[Workload], *,
                policies: dict[str, MgmtPolicy] | None = None,
                capacity: int | None = None,
                mtc_fixed_nodes: int | None = None,
-               schedulers: dict[str, object] | None = None) -> SystemResult:
+               schedulers: dict[str, object] | None = None,
+               coordination=None,
+               quotas: dict[str, int] | None = None,
+               reservations: dict[str, int] | None = None,
+               horizon: float | None = None) -> SystemResult:
     """Run one registered system over consolidated workloads.
 
     system: any ``repro.core.registry`` name ("dcs" | "ssp" | "drp" |
-        "dawningcloud" | "dawningcloud-backfill" | plugins)
+        "dawningcloud" | "dawningcloud-backfill" | "dawningcloud-coordinated"
+        | "dawningcloud-quota" | plugins)
     policies: workload name -> MgmtPolicy (DSP systems only)
     mtc_fixed_nodes: DCS/SSP configuration for MTC workloads (paper: 166)
     schedulers: workload name -> scheduler callable or SCHEDULERS key
+    coordination: multi-tenant coordination policy name/instance; defaults
+        to the system's ``coordination`` attribute. Any of coordination /
+        quotas / reservations (explicit or system defaults) routes the run
+        through a ``ResourceProvider`` with an admission queue; otherwise
+        the paper's plain grant-or-reject ``ProvisionService`` is used.
+    quotas / reservations: per-TRE hard caps / guaranteed minimums
+    horizon: hard simulation cutoff (default 16x the workload window). A
+        capacity-starved multi-tenant run can cycle hourly forever
+        (release-check frees idle blocks, the admission queue re-grants
+        them); the bound guarantees termination and surfaces the stall as
+        incomplete job counts instead of a hung emulator.
     """
     impl = get_system(system)
     workloads = [wl.fresh() for wl in workloads]
+    policies = dict(policies or {})
+    coordination = coordination if coordination is not None \
+        else impl.coordination
+    if quotas is None:
+        quotas = impl.default_quotas(workloads, policies)
+    if reservations is None:
+        reservations = impl.default_reservations(workloads)
+    if coordination is not None or quotas or reservations:
+        if capacity is None:
+            capacity = impl.default_capacity(workloads, policies)
+        provision: ProvisionService = ResourceProvider(
+            capacity, coordination=coordination, quotas=quotas,
+            reservations=reservations)
+    else:
+        provision = ProvisionService(capacity)
     sim = Sim()
-    provision = ProvisionService(capacity)
     lifecycle = LifecycleService(provision)
     window = max(wl.period for wl in workloads)
     ctx = EmulationContext(sim=sim, provision=provision, lifecycle=lifecycle,
-                          policies=dict(policies or {}),
+                          policies=policies,
                           schedulers=dict(schedulers or {}),
                           mtc_fixed_nodes=mtc_fixed_nodes)
     runners = [impl.build(ctx, wl) for wl in workloads]
-    sim.run()
-    # fixed REs persist for the whole workload period even after the last job
-    end = max(sim.t, window)
+    sim.run(until=horizon if horizon is not None else 16.0 * window)
+    # fixed REs persist for the whole workload period even after the last
+    # job; a completed run's end is its last fired event (sim.t is bumped
+    # to the cutoff even when the event heap drained long before it)
+    end = max(sim.last_event_t if sim.drained else sim.t, window)
+    # withdraw every parked request BEFORE the destroy loop: one tenant's
+    # destroy releases capacity, and a horizon-cutoff run may still have
+    # requests queued — a grant landing between two destroys would open a
+    # zero-duration lease billed a whole hour. drain=False: each cancel
+    # must not serve the *other* still-parked requests either
+    for r in runners:
+        env = getattr(r, "env", None)
+        if env is not None and not env.destroyed:
+            env.cancel_pending(end, drain=False)
     for r in runners:
         impl.finalize(ctx, r, end)
     per = {
@@ -384,4 +558,4 @@ def run_system(system: str, workloads: list[Workload], *,
         peak_nodes_per_hour=provision.peak_nodes_per_hour(end),
         adjust_count=provision.adjust_count(),
         setup_overhead_s=provision.setup_overhead_s(),
-        window_s=window)
+        window_s=window, capacity=provision.capacity)

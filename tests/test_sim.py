@@ -54,6 +54,9 @@ def test_blue_trace_calibration():
     wl = sdsc_blue_like()
     assert len(wl.jobs) == 2649
     assert wl.max_job_nodes <= 144
+    # the documented target utilization is realized exactly (runtimes are
+    # rescaled onto it) and matches the default the docstring quotes
+    assert abs(wl.utilization() - 0.51) < 1e-6
     # week 2 is the busy half
     mid = wl.period / 2
     w1 = sum(1 for j in wl.jobs if j.arrival < mid)
