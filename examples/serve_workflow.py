@@ -1,31 +1,29 @@
 """MTC serving: a Montage-shaped DAG of inference tasks through the
-continuous-batching engine, driven by the unified DSP control plane.
+continuous-batching engine, driven by the trace-rate serve driver.
 
-The ``repro.core.tre.MTCRuntimeEnv`` plays the paper's MTC TRE server: its
-trigger monitor releases a workflow task into the FCFS queue only when every
-dependency has completed, and its scheduler loads ready tasks onto free
-engine slots (1 node = 1 continuous-batching slot). The serving engine is
-just the *driver*: it advances the tick clock, executes decode steps, and
-reports finished requests back to the env — the same driver contract the
-discrete-event emulator and the elastic training controller use.
+This is now a thin entry point into ``repro.serve.driver.ServeDriver`` —
+the industrialized form of what used to be an inline driver loop here.
+The ``MTCRuntimeEnv`` plays the paper's MTC TRE server (trigger monitor +
+FCFS + DR1/DR2 negotiation against a shared ``ResourceProvider``), the
+real jax engine serves the requests through ``JaxEngineAdapter``, and the
+driver replays the workflow at trace rate with batched admission and
+deferred-grant backpressure. ``benchmarks/serve_trace.py`` runs the same
+driver at fleet scale.
 
   PYTHONPATH=src python examples/serve_workflow.py
 """
 from __future__ import annotations
 
-import dataclasses
-
-import numpy as np
-
 import jax
 
 from repro.configs import get_smoke_config
 from repro.configs.base import ParallelConfig
-from repro.core.provision import ProvisionService
-from repro.core.tre import MTCRuntimeEnv, TickClock
+from repro.core.policy import MgmtPolicy
+from repro.core.provider import ResourceProvider
 from repro.models.lm import LM
-from repro.serve.engine import Engine, Request
-from repro.sim.traces import montage_like
+from repro.serve.driver import JaxEngineAdapter, ServeDriver
+from repro.serve.engine import Engine
+from repro.sim.traces import montage_like, request_stream
 
 
 def main():
@@ -35,48 +33,30 @@ def main():
     params = lm.init(jax.random.key(0))[0]
     engine = Engine(lm, params, rt, max_batch=4, max_len=48)
 
-    # a small Montage-shaped workflow: each task = one generation request
-    wl = montage_like(n_project=6)
-    keep = {j.jid for j in wl.jobs[:40]}
-    tasks = {j.jid: dataclasses.replace(
-                 j, deps=tuple(d for d in j.deps if d in keep))
-             for j in wl.jobs[:40]}
-    rng = np.random.default_rng(0)
-
-    def admit(job):
-        """env launch hook: one free engine slot = the job's node."""
-        toks = rng.integers(1, cfg.vocab_size,
-                            (6, cfg.n_codebooks)).astype(np.int32)
-        ok = engine.admit(Request(rid=job.jid, tokens=toks, max_new_tokens=4))
-        assert ok, "env scheduled beyond free slots"
-
-    clock = TickClock()
-    env = MTCRuntimeEnv("montage-serve", provision=ProvisionService(),
-                        clock=clock, launch=admit,
-                        fixed_nodes=engine.max_batch)
-    env.track(tasks.values())
-    for j in tasks.values():
-        if not j.deps:
-            env.submit(j)               # trigger monitor releases the rest
-
-    # driver loop: decode steps advance the clock; finished requests go back
-    # to the env, which frees slots and chains newly-ready dependents
-    while env.queue or engine.active:
-        clock.advance()
-        for req in engine.step():
-            env.finish(tasks[req.rid])
-    assert env.all_done, (len(env.completed), len(tasks))
+    # a small Montage workflow, marked as an inference request DAG
+    wl = montage_like(n_project=8)
+    stream = request_stream([wl], period=wl.period, seed=0,
+                            seconds_per_token=4.0, prompt_lens=(4, 6))
+    provider = ResourceProvider(engine.max_batch, coordination="first-come")
+    driver = ServeDriver(
+        stream, provider=provider, engine=JaxEngineAdapter(engine, seed=0),
+        policy=MgmtPolicy(initial=2, ratio=1.0, scan_interval=3.0,
+                          release_interval=60.0),
+        name="montage-serve")
+    stats = driver.run()
+    assert stats.workflows_completed == len(stream), stats
+    assert stats.over_admissions == 0
 
     # dependencies respected in completion order
-    done_order = [j.jid for j in env.completed]
-    pos = {jid: i for i, jid in enumerate(done_order)}
-    for j in tasks.values():
+    pos = {j.jid: i for i, j in enumerate(driver.env.completed)}
+    for j in driver.env.completed:
         for d in j.deps:
             assert pos[d] < pos[j.jid]
-    env.destroy()
-    print(f"served {len(done_order)} workflow tasks in {engine.steps} decode "
-          f"steps (continuous batching, max_batch={engine.max_batch})")
-    print("dependency order respected; MTCRuntimeEnv trigger-monitor OK")
+    print(f"served {stats.tasks_completed} workflow tasks in {engine.steps} "
+          f"decode steps (continuous batching, max_batch={engine.max_batch})")
+    print(f"slot utilization {stats.slot_utilization:.1%}, "
+          f"peak slots {stats.peak_owned}, billed {stats.node_hours:.0f} "
+          f"node-hours; trigger-monitor order OK")
 
 
 if __name__ == "__main__":

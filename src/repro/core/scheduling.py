@@ -11,6 +11,13 @@
                  start. Needs the release times of running jobs — when the
                  caller cannot supply a complete profile it degrades to
                  plain ``fcfs`` (never optimistic).
+``easy``       — HTC, beyond-paper: EASY (aggressive) backfill. Only the
+                 *blocked head* gets a reservation; any later job may jump
+                 it if starting now cannot delay that reservation — jobs
+                 behind the head hold no reservation, so a fill may delay
+                 *them* (the EASY trade-off: better utilization, weaker
+                 fairness, head start-time guarantee kept). Same
+                 degrade-to-FCFS rule on an incomplete release profile.
 
 All schedulers share one signature: ``sched(queue, free, **context)`` and
 return the list of jobs to start now; the caller removes them from the
@@ -78,22 +85,33 @@ def _reserve(profile: list[list[float]], t0: float, runtime: float,
             step[1] -= nodes
 
 
+def _release_profile(free: int, now: float,
+                     running: Sequence[tuple[float, int]], busy: int,
+                     ) -> list[list[float]] | None:
+    """Projected free-node profile ``[[t, avail], ...]`` from the running
+    set's release times. Drops overdue reservations (a task running past
+    its estimate has NOT freed its nodes); returns None when any release
+    is unknown or stale — a missing release makes a head's reservation
+    infinitely late and every fill "harmless", so backfill variants must
+    refuse to guess and degrade to strict FCFS."""
+    running = [(t, n) for t, n in running if n > 0 and t > now]
+    if sum(n for _, n in running) < busy:
+        return None
+    profile: list[list[float]] = [[now, free]]
+    for t_end, n in sorted(running):
+        profile.append([t_end, profile[-1][1] + n])
+    return profile
+
+
 def backfill(queue: Sequence[Job], free: int, *, now: float = 0.0,
              running: Sequence[tuple[float, int]] = (), busy: int = 0,
              **_ctx) -> list[Job]:
     """FCFS with conservative backfill over the projected release profile."""
     if not queue:
         return []
-    # drop overdue reservations (a task running past its estimate has NOT
-    # freed its nodes); with any release unknown or stale, a missing release
-    # makes the head's reservation infinitely late and every fill
-    # "harmless" — refuse to guess, fall back to strict FCFS
-    running = [(t, n) for t, n in running if n > 0 and t > now]
-    if sum(n for _, n in running) < busy:
+    profile = _release_profile(free, now, running, busy)
+    if profile is None:
         return fcfs(queue, free)
-    profile: list[list[float]] = [[now, free]]
-    for t_end, n in sorted(running):
-        profile.append([t_end, profile[-1][1] + n])
     started: list[Job] = []
     for job in queue:
         t_start = _earliest_start(profile, job.nodes, job.runtime)
@@ -109,7 +127,45 @@ def backfill(queue: Sequence[Job], free: int, *, now: float = 0.0,
     return started
 
 
-SCHEDULERS = {"first_fit": first_fit, "fcfs": fcfs, "backfill": backfill}
+def easy_backfill(queue: Sequence[Job], free: int, *, now: float = 0.0,
+                  running: Sequence[tuple[float, int]] = (), busy: int = 0,
+                  **_ctx) -> list[Job]:
+    """EASY backfill: FCFS until a job blocks; the blocked head reserves
+    its earliest start against the release profile, and later jobs may
+    start *now* only if they fit the profile including that reservation —
+    the head's reserved start can never be delayed. Unlike conservative
+    ``backfill``, jobs behind the head get no reservation of their own
+    (a fill may push them back)."""
+    if not queue:
+        return []
+    profile = _release_profile(free, now, running, busy)
+    if profile is None:
+        return fcfs(queue, free)          # incomplete profile: never guess
+    started: list[Job] = []
+    head_blocked = False
+    for job in queue:
+        t_start = _earliest_start(profile, job.nodes, job.runtime)
+        if not head_blocked:
+            if t_start is None:
+                # wider than the pool ever gets: FCFS-blocking so a DSP
+                # env's next DR2 grant is not delayed by fills (matches
+                # conservative backfill)
+                break
+            if t_start <= now:
+                started.append(job)
+                _reserve(profile, now, job.runtime, job.nodes)
+            else:
+                head_blocked = True
+                # the head's reservation — the only one EASY honors
+                _reserve(profile, t_start, job.runtime, job.nodes)
+        elif t_start is not None and t_start <= now:
+            started.append(job)
+            _reserve(profile, now, job.runtime, job.nodes)
+    return started
+
+
+SCHEDULERS = {"first_fit": first_fit, "fcfs": fcfs, "backfill": backfill,
+              "easy": easy_backfill}
 
 
 def scheduler_for(kind: str):

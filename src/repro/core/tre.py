@@ -131,6 +131,14 @@ class RuntimeEnv:
         # one is parked the env amends it at each scan rather than
         # re-submitting (double-queueing would double-grant)
         self._pending_req = None
+        # live-driver hook: called with (nodes, t, deferred) after every
+        # committed grant. ``deferred`` is True when the grant landed
+        # through the provider's admission-queue drain (another tenant's
+        # release) rather than inside this env's own scan — a trace-rate
+        # serving driver uses it to observe asynchronous slot growth
+        # between its control ticks
+        self.grant_listener: Callable[[int, float, bool], None] | None = None
+        self._in_scan = False
         # ---- lifecycle: §3.1.3 creation path ----
         eff_policy = policy if policy is not None else \
             MgmtPolicy(fixed_nodes, 0.0, float("inf"))
@@ -164,15 +172,26 @@ class RuntimeEnv:
         self._idle_t = t
 
     # --------------------------------------------------- trigger monitor
-    def track(self, jobs: Iterable[Any]) -> None:
+    def track(self, jobs: Iterable[Any], *, extend: bool = False) -> None:
         """Register a workload's dependency graph with the trigger monitor.
         Dependency-free jobs must still be submitted by the driver (at their
         arrival times); dependent jobs are auto-submitted by :meth:`finish`
-        when their last dependency completes."""
+        when their last dependency completes.
+
+        ``extend=True`` adds the jobs to the already-tracked graph instead
+        of replacing it — a streaming driver registers each workflow as it
+        arrives (jids must be globally unique across the stream)."""
         jobs = list(jobs)
-        self._expected = len(jobs)
-        self._ndeps = {j.jid: len(j.deps) for j in jobs}
-        self._children = {}
+        if not extend:
+            self._expected = len(jobs)
+            self._ndeps = {j.jid: len(j.deps) for j in jobs}
+            self._children = {}
+        else:
+            self._expected = (self._expected or 0) + len(jobs)
+            for j in jobs:
+                assert j.jid not in self._ndeps, \
+                    f"duplicate jid {j.jid} in extended track"
+                self._ndeps[j.jid] = len(j.deps)
         for j in jobs:
             for d in j.deps:
                 self._children.setdefault(d, []).append(j)
@@ -191,8 +210,13 @@ class RuntimeEnv:
         started = self.scheduler(
             self.queue, self.free, now=self.clock.now(),
             running=tuple(self._reserved.values()), busy=self.busy)
+        if started:
+            # one linear rebuild, not a remove() per start: a trace-scale
+            # MTC queue holds thousands of ready tasks and a wide grant
+            # starts hundreds of them in one schedule call
+            started_ids = {id(t) for t in started}
+            self.queue = [t for t in self.queue if id(t) not in started_ids]
         for task in started:
-            self.queue.remove(task)
             task.start = self.clock.now()
             self._account_idle()
             self.busy += task.nodes
@@ -264,6 +288,8 @@ class RuntimeEnv:
         self._account_idle()
         self.engine.granted(take)
         self.owned += take
+        if self.grant_listener is not None:
+            self.grant_listener(take, t, not self._in_scan)
         self.schedule()
         return take
 
@@ -275,27 +301,31 @@ class RuntimeEnv:
         if self.destroyed:
             return 0
         owned_before = self.owned
-        if self.engine is not None:
-            demands = [task.nodes for task in self.queue]
-            need, min_useful = self._deficit(demands)
-            t = self.clock.now()
-            pending = self._pending_req
-            urgency = self.engine.urgency(demands, self.owned)
-            if pending is not None and pending.status == "queued":
-                # refresh the parked request with the live deficit and
-                # urgency; the amend may complete it immediately (a
-                # smaller need now fits)
-                self.provision.amend(pending, need, t, min_useful,
-                                     priority=urgency)
-                if pending.status != "queued":
-                    self._pending_req = None
-            elif need > 0:
-                req = self.provision.submit_request(
-                    self.name, need, t, on_grant=self._apply_grant,
-                    count_adjust=self.count_adjust, priority=urgency,
-                    min_useful=min_useful)
-                self._pending_req = req if req.status == "queued" else None
-        self.schedule()
+        self._in_scan = True
+        try:
+            if self.engine is not None:
+                demands = [task.nodes for task in self.queue]
+                need, min_useful = self._deficit(demands)
+                t = self.clock.now()
+                pending = self._pending_req
+                urgency = self.engine.urgency(demands, self.owned)
+                if pending is not None and pending.status == "queued":
+                    # refresh the parked request with the live deficit and
+                    # urgency; the amend may complete it immediately (a
+                    # smaller need now fits)
+                    self.provision.amend(pending, need, t, min_useful,
+                                         priority=urgency)
+                    if pending.status != "queued":
+                        self._pending_req = None
+                elif need > 0:
+                    req = self.provision.submit_request(
+                        self.name, need, t, on_grant=self._apply_grant,
+                        count_adjust=self.count_adjust, priority=urgency,
+                        min_useful=min_useful)
+                    self._pending_req = req if req.status == "queued" else None
+            self.schedule()
+        finally:
+            self._in_scan = False
         return self.owned - owned_before
 
     def release_check(self) -> int:

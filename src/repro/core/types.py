@@ -19,6 +19,10 @@ class Job:
     deps: tuple = ()        # jids this job waits on (same workload)
     wid: int = -1           # workflow id (-1 = independent HTC job)
     name: str = ""
+    # ---- token-length marks (MTC serving: one task = one inference
+    # request; repro.sim.traces.mark_tokens stamps these from runtime) ----
+    prompt_len: int = 0     # prompt tokens (0 = not an inference task)
+    decode_len: int = 0     # decode tokens = service ticks at 1 tok/tick
     # ---- filled in by a run ----
     submit_time: float = -1.0   # entered the queue (deps satisfied)
     start: float = -1.0

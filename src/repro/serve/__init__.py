@@ -1,1 +1,4 @@
 from repro.serve.engine import Engine, Request  # noqa: F401
+from repro.serve.driver import (  # noqa: F401
+    EmulatedEngine, JaxEngineAdapter, ServeDriver, ServeStats,
+)

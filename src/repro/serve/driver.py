@@ -1,0 +1,339 @@
+"""Trace-rate MTC serving driver over the shared resource provider.
+
+This is the live-serving counterpart of the discrete-event emulator: the
+same ``MTCRuntimeEnv`` control plane (trigger monitor, FCFS dispatch,
+DR1/DR2 negotiation, time-averaged release checks) driving a
+continuous-batching engine at *trace rate* — thousands of Montage-shaped
+workflows replayed at their trace timestamps on a ``TickClock``:
+
+  - **workflow arrivals** come from ``repro.sim.traces.request_stream``:
+    each arrival registers its DAG with the env's trigger monitor
+    (``track(extend=True)``) and submits the dependency-free roots; the
+    env loads them at scan ticks, exactly like the emulator's DSP mode,
+  - **engine slots are provisioned, not assumed**: 1 batching slot = 1
+    node. The env's scans emit ``ResourceRequest``s against the shared
+    ``repro.core.provider.ResourceProvider``; a contended platform *parks*
+    the request and the deferred grant lands between control ticks through
+    ``on_grant`` (observed via the env's ``grant_listener``),
+  - **admission backpressure**: while a grant is deferred, newly arrived
+    workflow roots wait in the env queue — the driver never admits a task
+    into the engine beyond the granted slot count (asserted every tick;
+    ``ServeStats.over_admissions`` stays 0),
+  - **batched admission**: tasks launched during a tick are buffered and
+    admitted together at the end of the tick (one prefill dispatch per
+    prompt shape via ``Engine.admit_many``); they decode from the next
+    tick on, so a task admitted at tick T with ``decode_len`` R finishes
+    at T + R — the same timing the emulator's finish events produce,
+    which is what makes emulator-vs-live parity bit-exact.
+
+Engines plug in through a 3-method adapter (``capacity`` /
+``admit_many(jobs)`` / ``step() -> finished jids``): ``EmulatedEngine`` is
+the tick-accurate stand-in used for trace-scale runs and the parity/
+property suite; ``JaxEngineAdapter`` drives the real
+``repro.serve.engine.Engine`` (prompts synthesized from the jobs'
+token-length marks) so the same driver serves actual inference traffic.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.lifecycle import LifecycleService
+from repro.core.policy import MgmtPolicy
+from repro.core.provision import ProvisionService
+from repro.core.tre import MTCRuntimeEnv, TickClock
+from repro.core.types import Job
+
+
+@dataclass
+class ServeStats:
+    """One serve run's outcome + the invariants it maintained."""
+    name: str
+    ticks: int = 0
+    tick_s: float = 1.0
+    workflows_expected: int = 0
+    workflows_completed: int = 0
+    tasks_completed: int = 0
+    makespan_s: float = 0.0
+    workflows_per_hour: float = 0.0
+    busy_node_ticks: float = 0.0        # integral of serving slots
+    owned_node_ticks: float = 0.0       # integral of granted slots
+    slot_utilization: float = 0.0       # busy / owned integrals
+    node_hours: float = 0.0             # billed (per started lease hour)
+    peak_owned: int = 0
+    queue_peak: int = 0
+    deferred_grants: int = 0            # grants landed via admission queue
+    deferred_nodes: int = 0
+    over_admissions: int = 0            # ticks where engine > granted (== 0)
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class EmulatedEngine:
+    """Tick-accurate engine stand-in: a task admitted at tick T occupies a
+    slot and finishes after its service ticks (``decode_len`` marks, else
+    ceil(runtime / tick_s)) — slot accounting vectorized over NumPy arrays
+    like the real engine's. Used for trace-scale runs and the parity suite
+    (service ticks == emulator runtime => identical finish times)."""
+
+    def __init__(self, capacity: int, *, tick_s: float = 1.0):
+        self.capacity = capacity
+        self.tick_s = tick_s
+        self.free = list(range(capacity))
+        self._active = np.zeros((capacity,), bool)
+        self._remaining = np.zeros((capacity,), np.int64)
+        self._rid = np.full((capacity,), -1, np.int64)
+        self._admit_seq = np.zeros((capacity,), np.int64)
+        self._seq = 0
+        self.steps = 0
+
+    @property
+    def active_count(self) -> int:
+        return int(self._active.sum())
+
+    def service_ticks(self, job: Job) -> int:
+        if job.decode_len > 0:
+            return job.decode_len
+        return max(int(math.ceil(job.runtime / self.tick_s)), 1)
+
+    def admit_many(self, jobs: Sequence[Job]) -> None:
+        assert len(jobs) <= len(self.free), "admitted beyond free slots"
+        for job in jobs:
+            slot = self.free.pop()
+            self._active[slot] = True
+            self._remaining[slot] = self.service_ticks(job)
+            self._rid[slot] = job.jid
+            self._admit_seq[slot] = self._seq
+            self._seq += 1
+
+    def step(self) -> list[int]:
+        """One decode tick for every active slot; returns finished jids in
+        admission order (matching the emulator's finish-event order)."""
+        if not self._active.any():
+            return []
+        self._remaining[self._active] -= 1
+        self.steps += 1
+        done = np.nonzero(self._active & (self._remaining <= 0))[0]
+        done = done[np.argsort(self._admit_seq[done], kind="stable")]
+        finished = [int(self._rid[s]) for s in done]
+        self._active[done] = False
+        self._rid[done] = -1
+        self.free.extend(int(s) for s in done)
+        return finished
+
+
+class JaxEngineAdapter:
+    """Drives the real continuous-batching ``repro.serve.engine.Engine``:
+    each workflow task becomes an inference request whose prompt is
+    synthesized (seeded) at its ``prompt_len`` mark and whose decode
+    budget is its ``decode_len`` mark, capped to the engine's cache."""
+
+    def __init__(self, engine, *, seed: int = 0):
+        from repro.serve.engine import Request   # lazy: keeps jax optional
+        self._Request = Request
+        self.engine = engine
+        self.capacity = engine.max_batch
+        cfg = engine.lm.cfg
+        self._vocab = cfg.vocab_size
+        self._ncb = cfg.n_codebooks
+        self._max_len = engine.max_len
+        self._rng = np.random.default_rng(seed)
+
+    @property
+    def active_count(self) -> int:
+        return self.engine.active_count
+
+    def _request(self, job: Job) -> "Request":
+        plen = max(job.prompt_len, 1)
+        shape = (plen,) if self._ncb <= 1 else (plen, self._ncb)
+        toks = self._rng.integers(1, self._vocab, shape).astype(np.int32)
+        # prefill already emits token 1 at admit, so a budget of R+1
+        # finishes after exactly R decode steps — decode_len marks mean
+        # *service ticks*, the contract EmulatedEngine implements
+        budget = max(min(job.decode_len + 1, self._max_len - plen), 2)
+        return self._Request(rid=job.jid, tokens=toks, max_new_tokens=budget)
+
+    def admit_many(self, jobs: Sequence[Job]) -> None:
+        admitted = self.engine.admit_many([self._request(j) for j in jobs])
+        assert len(admitted) == len(jobs), "admitted beyond free slots"
+
+    def step(self) -> list[int]:
+        return [req.rid for req in self.engine.step()]
+
+
+class ServeDriver:
+    """Replay a workflow arrival stream through one MTC TRE at trace rate.
+
+    stream: ``[(arrival_t, jobs), ...]`` from ``traces.request_stream``
+        (globally unique jids, deps remapped, token-length marks).
+    provider: the shared provision service — a multi-tenant
+        ``ResourceProvider`` gives deferred grants + backpressure; a plain
+        ``ProvisionService`` gives the paper's grant-or-reject.
+    engine: an engine adapter (``EmulatedEngine`` / ``JaxEngineAdapter``).
+    policy / fixed_nodes: exactly one — DSP elasticity vs a dedicated
+        engine of a fixed slot count (the baseline).
+    contention: ``[(t, tre, delta), ...]`` co-tenant load replayed against
+        the provider (positive = request, negative = release) — the "grant
+        sequence" a parity test scripts identically into the emulator.
+    """
+
+    def __init__(self, stream: Sequence[tuple[float, list[Job]]], *,
+                 provider: ProvisionService, engine,
+                 policy: MgmtPolicy | None = None,
+                 fixed_nodes: int | None = None,
+                 name: str = "mtc-serve", scheduler=None,
+                 lifecycle: LifecycleService | None = None,
+                 tick_s: float = 1.0,
+                 contention: Sequence[tuple[float, str, int]] = (),
+                 max_ticks: int | None = None, strict: bool = True):
+        self.stream = sorted(stream, key=lambda e: e[0])
+        self.provider = provider
+        self.engine = engine
+        self.tick_s = tick_s
+        self.strict = strict
+        self.clock = TickClock()
+        self.stats = ServeStats(name=name, tick_s=tick_s,
+                                workflows_expected=len(self.stream))
+        self._admit_buf: list[Job] = []
+        self.tasks: dict[int, Job] = {}
+        self._wf_left: dict[int, int] = {}     # wid -> unfinished tasks
+        self._stream_i = 0
+        self._contention = sorted(contention, key=lambda e: e[0])
+        self._cont_i = 0
+        if policy is not None:
+            self._scan_every = max(int(round(policy.scan_interval / tick_s)),
+                                   1)
+            self._release_every = max(
+                int(round(policy.release_interval / tick_s)), 1)
+        else:
+            self._scan_every = self._release_every = 0
+        self.env = MTCRuntimeEnv(
+            name, provision=provider, clock=self.clock, launch=self._launch,
+            policy=policy, fixed_nodes=fixed_nodes, scheduler=scheduler,
+            lifecycle=lifecycle, max_nodes=engine.capacity)
+        self.env.grant_listener = self._on_grant
+        self.env.track(())            # an empty stream is already all_done
+        if max_ticks is None:
+            span = self.stream[-1][0] / tick_s if self.stream else 0.0
+            work = sum(self.engine.service_ticks(j)
+                       if isinstance(self.engine, EmulatedEngine)
+                       else max(j.decode_len, 1)
+                       for _, jobs in self.stream for j in jobs)
+            max_ticks = int(span + 8 * work + 36_000)
+        self.max_ticks = max_ticks
+
+    # ------------------------------------------------------- env hooks
+    def _launch(self, job: Job) -> None:
+        # buffered: the tick flushes launches as ONE batched admit, and
+        # the task starts decoding next tick — emulator-identical timing
+        assert job.nodes == 1, "1 MTC task = 1 batching slot (= 1 node)"
+        self._admit_buf.append(job)
+
+    def _on_grant(self, nodes: int, t: float, deferred: bool) -> None:
+        if deferred:
+            self.stats.deferred_grants += 1
+            self.stats.deferred_nodes += nodes
+
+    # ------------------------------------------------------- tick parts
+    def _submit_arrivals(self, now: float) -> None:
+        while (self._stream_i < len(self.stream)
+               and self.stream[self._stream_i][0] <= now + 1e-9):
+            _, jobs = self.stream[self._stream_i]
+            self._stream_i += 1
+            if not jobs:
+                continue
+            self.env.track(jobs, extend=True)
+            for j in jobs:
+                self._wf_left[j.wid] = self._wf_left.get(j.wid, 0) + 1
+                self.tasks[j.jid] = j
+                if not j.deps:
+                    self.env.submit(j)
+
+    def _replay_contention(self, now: float) -> None:
+        while (self._cont_i < len(self._contention)
+               and self._contention[self._cont_i][0] <= now + 1e-9):
+            t, tre, delta = self._contention[self._cont_i]
+            self._cont_i += 1
+            if delta > 0:
+                ok = self.provider.request(tre, delta, now)
+                assert ok or not self.strict, (tre, delta, now)
+            elif delta < 0:
+                self.provider.release(tre, -delta, now)
+
+    def _flush_admissions(self) -> None:
+        if not self._admit_buf:
+            return
+        if self.engine.active_count + len(self._admit_buf) > self.env.owned:
+            self.stats.over_admissions += 1
+            assert not self.strict, (
+                "over-admission: %d active + %d buffered > %d granted"
+                % (self.engine.active_count, len(self._admit_buf),
+                   self.env.owned))
+        self.engine.admit_many(self._admit_buf)
+        self._admit_buf.clear()
+
+    def _check_invariants(self) -> None:
+        """End-of-tick consistency: the engine serves exactly the env's
+        busy nodes, and nothing exceeds the granted slot count."""
+        active = self.engine.active_count
+        if active > self.env.owned or self.env.busy > self.env.owned:
+            self.stats.over_admissions += 1
+            assert not self.strict, (active, self.env.busy, self.env.owned)
+        assert active == self.env.busy or not self.strict, \
+            (active, self.env.busy)
+
+    @property
+    def _done(self) -> bool:
+        return (self._stream_i == len(self.stream) and self.env.all_done
+                and not self._admit_buf and self.engine.active_count == 0)
+
+    def _tick(self, k: int) -> None:
+        now = self.clock.now()
+        self._submit_arrivals(now)
+        self._replay_contention(now)
+        if self._release_every and k > 0 and k % self._release_every == 0:
+            self.env.release_check()
+        for jid in self.engine.step():
+            task = self.tasks[jid]
+            self.env.finish(task)
+            self.stats.tasks_completed += 1
+            self._wf_left[task.wid] -= 1
+            if self._wf_left[task.wid] == 0:
+                self.stats.workflows_completed += 1
+        if self._scan_every and k > 0 and k % self._scan_every == 0:
+            self.env.scan()
+        self._flush_admissions()
+        self._check_invariants()
+        self.stats.busy_node_ticks += self.env.busy * self.tick_s
+        self.stats.owned_node_ticks += self.env.owned * self.tick_s
+        self.stats.peak_owned = max(self.stats.peak_owned, self.env.owned)
+        self.stats.queue_peak = max(self.stats.queue_peak,
+                                    len(self.env.queue))
+
+    # -------------------------------------------------------------- run
+    def run(self) -> ServeStats:
+        """Replay the stream to completion (or the tick bound); destroy
+        the TRE (closing every lease) and return the stats."""
+        k = 0
+        self._tick(k)
+        while not self._done and k < self.max_ticks:
+            k += 1
+            self.clock.advance(self.tick_s)
+            self._tick(k)
+        self.stats.ticks = k
+        self.stats.makespan_s = self.clock.now()
+        if self.stats.makespan_s > 0:
+            self.stats.workflows_per_hour = (
+                self.stats.workflows_completed
+                / (self.stats.makespan_s / 3600.0))
+        if self.stats.owned_node_ticks > 0:
+            self.stats.slot_utilization = (self.stats.busy_node_ticks
+                                           / self.stats.owned_node_ticks)
+        self.env.destroy()
+        self.stats.node_hours = self.provider.node_hours(
+            self.env.name, now=self.clock.now())
+        return self.stats

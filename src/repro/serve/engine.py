@@ -5,18 +5,25 @@ Requests are admitted into free slots (prefill writes the slot), then all
 active slots decode together each step; finished slots free immediately so
 new requests join mid-flight — continuous batching. Greedy sampling.
 
+The admit path is batched (:meth:`Engine.admit_many`): requests admitted
+together are grouped by prompt shape and prefilled in one forward pass per
+group, then spliced into their slots — a trace-rate driver that buffers a
+tick's launches gets one prefill dispatch per prompt length instead of one
+per request. Slot accounting (last-token gather, output accumulation,
+length bumps, finish detection) is vectorized over NumPy slot arrays; the
+only per-request Python is materializing finished requests.
+
 MTC workflows (Montage-style DAGs of inference tasks) are driven by
 ``repro.core.tre.MTCRuntimeEnv``, which feeds this engine only tasks whose
 dependencies completed — the DawningCloud "trigger monitor" role. The env
-treats each batching slot as one node; ``examples/serve_workflow.py`` is
-the reference driver wiring (engine steps advance a ``TickClock``, finished
-requests are reported back via ``env.finish``).
+treats each batching slot as one node; ``repro.serve.driver.ServeDriver``
+is the trace-rate driver wiring (engine steps advance a ``TickClock``,
+finished requests are reported back via ``env.finish``) and
+``examples/serve_workflow.py`` the reference entry point.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +56,24 @@ class Engine:
             donate_argnums=(3,))
         self._prefill = {}
         self.steps = 0
+        # ---- vectorized slot accounting ----
+        ncb = lm.cfg.n_codebooks
+        tok_shape = (max_batch,) if ncb <= 1 else (max_batch, ncb)
+        self._active_mask = np.zeros((max_batch,), bool)
+        self._last_tok = np.zeros(tok_shape, np.int32)
+        # generated tokens per slot (admit writes index 0; step appends).
+        # max_new_tokens <= max_len is enforced at admit, +1 covers the
+        # prefill token of a budget-1 request
+        self._out_buf = np.zeros((max_batch, max_len + 1) + tok_shape[1:],
+                                 np.int32)
+        self._out_len = np.zeros((max_batch,), np.int64)
+        self._budget = np.zeros((max_batch,), np.int64)
+        self._admit_seq = np.zeros((max_batch,), np.int64)
+        self._seq = 0
+
+    @property
+    def active_count(self) -> int:
+        return len(self.active)
 
     # ---------------------------------------------------------- prefill
     def _prefill_fn(self, plen: int, has_patches: bool):
@@ -71,24 +96,66 @@ class Engine:
         self.caches = jax.tree.map(splice, self.caches, pre_caches)
 
     def admit(self, req: Request) -> bool:
-        if not self.free:
-            return False
-        plen = len(req.tokens)
-        n_img = self.lm.cfg.n_patches if req.patches is not None else 0
-        if plen + n_img + req.max_new_tokens > self.max_len:
-            raise ValueError("request exceeds cache capacity")
-        slot = self.free.pop()
-        batch = {"tokens": jnp.asarray(req.tokens)[None]}
-        if req.patches is not None:
-            batch["patches"] = jnp.asarray(req.patches)[None]
-        logits, pre_caches, _ = self._prefill_fn(plen, req.patches is not None)(
-            self.params, batch)
-        self._splice_caches(slot, pre_caches)
-        self.lengths = self.lengths.at[slot].set(plen + n_img)
-        tok = np.asarray(jnp.argmax(logits, axis=-1))[0]  # () or (ncb,)
-        req.out_tokens.append(tok)
-        self.active[slot] = req
-        return True
+        return bool(self.admit_many([req]))
+
+    def admit_many(self, reqs: list[Request]) -> list[Request]:
+        """Admit requests into free slots (as many as fit, in order).
+
+        Admissions are grouped by (prompt length, has-patches) and each
+        group runs ONE batched prefill forward pass; per-slot splices then
+        scatter the group's caches. Returns the admitted requests — the
+        caller keeps the remainder for the next admit window. Note each
+        distinct (prompt length, group size) pair JIT-specializes the
+        prefill once; keep prompt lengths to a small discrete set.
+        """
+        # validate the whole batch BEFORE touching any slot: an oversize
+        # request mid-batch must not leak already-popped slots
+        for req in reqs[:len(self.free)]:
+            plen = len(req.tokens)
+            n_img = self.lm.cfg.n_patches if req.patches is not None else 0
+            if plen + n_img + req.max_new_tokens > self.max_len:
+                raise ValueError("request exceeds cache capacity")
+        groups: dict[tuple[int, bool], list[tuple[int, Request]]] = {}
+        admitted: list[Request] = []
+        order: dict[int, int] = {}          # slot -> call-order seq
+        for req in reqs:
+            if not self.free:
+                break
+            slot = self.free.pop()
+            order[slot] = self._seq
+            self._seq += 1
+            groups.setdefault((len(req.tokens), req.patches is not None),
+                              []).append((slot, req))
+            admitted.append(req)
+        for (plen, has_patches), members in groups.items():
+            batch = {"tokens": jnp.asarray(
+                np.stack([np.asarray(r.tokens) for _, r in members]))}
+            if has_patches:
+                batch["patches"] = jnp.asarray(
+                    np.stack([np.asarray(r.patches) for _, r in members]))
+            n_img = self.lm.cfg.n_patches if has_patches else 0
+            logits, pre_caches, _ = self._prefill_fn(plen, has_patches)(
+                self.params, batch)
+            toks = np.asarray(jnp.argmax(logits, axis=-1))  # (k,) or (k,ncb)
+            slots = np.array([s for s, _ in members])
+            for i, (slot, req) in enumerate(members):
+                self._splice_caches(slot, jax.tree.map(
+                    lambda a, _i=i: jax.lax.dynamic_slice_in_dim(a, _i, 1,
+                                                                 axis=1),
+                    pre_caches))
+                self.active[slot] = req
+                req.out_tokens.append(toks[i])
+            self.lengths = self.lengths.at[slots].set(plen + n_img)
+            self._last_tok[slots] = toks
+            self._out_buf[slots, 0] = toks
+            self._out_len[slots] = 1
+            self._budget[slots] = [r.max_new_tokens for _, r in members]
+            self._active_mask[slots] = True
+            # call-order seqs (NOT group order): same-step finishes must
+            # come back in admission order across shape groups, matching
+            # EmulatedEngine and the emulator's per-slot event queue
+            self._admit_seq[slots] = [order[s] for s, _ in members]
+        return admitted
 
     # ----------------------------------------------------------- decode
     def step(self) -> list[Request]:
@@ -96,25 +163,31 @@ class Engine:
         if not self.active:
             return []
         ncb = self.lm.cfg.n_codebooks
-        tok_shape = (self.max_batch, 1) if ncb <= 1 else (self.max_batch, 1, ncb)
-        toks = np.zeros(tok_shape, np.int32)
-        for slot, req in self.active.items():
-            toks[slot, 0] = req.out_tokens[-1]
+        toks = (self._last_tok[:, None] if ncb <= 1
+                else self._last_tok[:, None, :])
         logits, self.caches = self._decode(
             self.params, jnp.asarray(toks), self.lengths, self.caches)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))  # (B,) or (B,ncb)
-        upd = np.zeros((self.max_batch,), np.int32)
-        finished = []
-        for slot, req in list(self.active.items()):
-            req.out_tokens.append(nxt[slot])
-            upd[slot] = 1
-            if len(req.out_tokens) >= req.max_new_tokens:
-                req.done = True
-                finished.append(req)
-                del self.active[slot]
-                self.free.append(slot)
-        self.lengths = self.lengths + jnp.asarray(upd)
+        mask = self._active_mask
+        self._last_tok[mask] = nxt[mask]
+        self._out_buf[mask, self._out_len[mask]] = nxt[mask]
+        self._out_len[mask] += 1
+        self.lengths = self.lengths + jnp.asarray(mask.astype(np.int32))
         self.steps += 1
+        done = np.nonzero(mask & (self._out_len >= self._budget))[0]
+        # finish in admission order: the env observes completions in the
+        # same order a per-slot event queue would deliver them
+        done = done[np.argsort(self._admit_seq[done], kind="stable")]
+        finished = []
+        for slot in (int(s) for s in done):
+            req = self.active.pop(slot)
+            req.done = True
+            # materialize the slot's output buffer (admit wrote index 0)
+            req.out_tokens = [self._out_buf[slot, i]
+                              for i in range(int(self._out_len[slot]))]
+            self._active_mask[slot] = False
+            self.free.append(slot)
+            finished.append(req)
         return finished
 
     def run(self, requests: list[Request]) -> list[Request]:
@@ -122,7 +195,8 @@ class Engine:
         pending = list(requests)
         done: list[Request] = []
         while pending or self.active:
-            while pending and self.free:
-                self.admit(pending.pop(0))
+            if pending and self.free:
+                admitted = self.admit_many(pending[:len(self.free)])
+                del pending[:len(admitted)]
             done.extend(self.step())
         return done

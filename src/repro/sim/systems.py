@@ -21,7 +21,8 @@ shared verbatim with the live JAX controller. What remains here is the
 
 Usage models are plugins: each is a ``repro.core.registry.System``
 registered under its name (``dcs`` / ``ssp`` / ``drp`` / ``dawningcloud``,
-plus the beyond-paper ``dawningcloud-backfill``, and the multi-tenant
+plus the beyond-paper ``dawningcloud-backfill`` / ``dawningcloud-easy``
+(conservative vs EASY backfill), and the multi-tenant
 ``dawningcloud-coordinated`` / ``dawningcloud-quota`` scenarios that route
 through ``repro.core.provider.ResourceProvider`` — shared finite capacity,
 admission queueing, PhoenixCloud-style coordination), and ``run_system`` is
@@ -362,6 +363,17 @@ class DawningCloudBackfillSystem(DawningCloudSystem):
 
     def default_scheduler(self, wl: Workload):
         return "backfill" if wl.kind == "htc" else None
+
+
+@register_system("dawningcloud-easy")
+class DawningCloudEasySystem(DawningCloudBackfillSystem):
+    """EASY-backfill variant: HTC TREs reserve only the blocked head
+    (aggressive fills, the head's reserved start still inviolable) —
+    higher utilization than conservative backfill at the cost of
+    reservation guarantees for non-head queue positions."""
+
+    def default_scheduler(self, wl: Workload):
+        return "easy" if wl.kind == "htc" else None
 
 
 # --------------------------------------------------------------------------

@@ -22,6 +22,8 @@ seed and EXPERIMENTS.md reports our numbers beside the paper's.
 """
 from __future__ import annotations
 
+import zlib
+
 import numpy as np
 
 from repro.core.types import Job, Workload
@@ -279,3 +281,67 @@ def workload_family(n_htc: int, n_mtc: int, seed: int = 0, *,
             wl.name = f"{wl.name}{j}"
         out.append(wl)
     return out
+
+
+# --------------------------------------------------------------------------
+# request-DAG emission (MTC serving): workflows as inference request streams
+# --------------------------------------------------------------------------
+def mark_tokens(wl: Workload, *, seconds_per_token: float = 1.0,
+                prompt_lens: tuple[int, ...] = (4, 6, 8),
+                seed: int = 0) -> Workload:
+    """Stamp token-length marks onto a workflow's tasks: each MTC task is
+    one inference request whose decode budget reproduces its trace runtime
+    at the engine's decode rate (``decode_len = runtime / seconds_per_token``,
+    floored at 1 so every task costs at least one decode step). Prompt
+    lengths are drawn from a small discrete set so a batched admit can
+    group same-shape prefills into one call. Deterministic per seed;
+    returns a fresh workload, the input is untouched."""
+    rng = np.random.default_rng((seed << 4) ^ zlib.crc32(wl.name.encode()))
+    out = wl.fresh()
+    for j in out.jobs:
+        j.prompt_len = int(rng.choice(prompt_lens))
+        j.decode_len = max(int(round(j.runtime / seconds_per_token)), 1)
+    return out
+
+
+def request_stream(workloads: list[Workload], *, period: float | None = None,
+                   seed: int = 0, seconds_per_token: float = 1.0,
+                   prompt_lens: tuple[int, ...] = (4, 6, 8),
+                   ) -> list[tuple[float, list[Job]]]:
+    """Merge MTC workloads into one trace-rate workflow arrival stream.
+
+    Each workload's DAG (a whole Montage-shaped workflow) becomes one
+    stream entry ``(arrival_t, jobs)``: jids are re-keyed to be globally
+    unique (deps remapped, ``wid`` = stream index) so thousands of
+    workflows can share a single ``MTCRuntimeEnv`` trigger monitor, and
+    every task carries token-length marks (:func:`mark_tokens`). Workflow
+    arrivals are a seeded Poisson process over ``[0, period)`` (default:
+    the widest workload window) — the trace timestamps a serving driver
+    replays on its tick clock. Sorted by arrival; workflow 0 arrives at
+    t=0 so a stream is never empty-headed."""
+    mtc = [wl for wl in workloads if wl.kind == "mtc"]
+    if not mtc:
+        return []
+    if period is None:
+        period = max(wl.period for wl in mtc)
+    rng = np.random.default_rng((seed << 8) ^ 0x5E12E)
+    gaps = rng.exponential(period / max(len(mtc), 1), len(mtc))
+    arrivals = np.concatenate([[0.0], np.cumsum(gaps)[:-1]])
+    arrivals = np.minimum(arrivals, period - 1.0)
+    stream: list[tuple[float, list[Job]]] = []
+    base = 0
+    for k, wl in enumerate(mtc):
+        marked = mark_tokens(wl, seconds_per_token=seconds_per_token,
+                             prompt_lens=prompt_lens, seed=seed + k)
+        jobs = []
+        for j in marked.jobs:
+            jobs.append(Job(
+                jid=base + j.jid, arrival=float(arrivals[k]),
+                runtime=j.runtime, nodes=j.nodes,
+                deps=tuple(base + d for d in j.deps), wid=k,
+                name=f"{wl.name}/{j.name}", prompt_len=j.prompt_len,
+                decode_len=j.decode_len))
+        base += len(marked.jobs)
+        stream.append((float(arrivals[k]), jobs))
+    stream.sort(key=lambda e: e[0])
+    return stream

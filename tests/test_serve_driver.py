@@ -1,0 +1,430 @@
+"""Trace-rate MTC serve driver: emulator-vs-live parity, trigger-monitor /
+backpressure properties, request-stream emission, real-engine integration.
+
+The parity contract (tests/README.md): the discrete-event emulator
+(``repro.sim.systems.REServer``) and the live serve driver
+(``repro.serve.driver.ServeDriver``) are two drivers of the SAME
+``MTCRuntimeEnv``. Given the same Montage DAG and the same scripted grant
+sequence (co-tenant contention on the shared ``ResourceProvider``), they
+must make bit-identical scheduling and release decisions: the same
+lease-adjustment events at the same instants, the same per-task
+start/finish times, the same completion order.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from tests.conftest import given, settings, st
+
+from repro.core.policy import MgmtPolicy
+from repro.core.provider import ResourceProvider
+from repro.core.provision import ProvisionService
+from repro.core.types import Job, Workload
+from repro.serve.driver import EmulatedEngine, JaxEngineAdapter, ServeDriver
+from repro.sim.engine import Sim
+from repro.sim.systems import REServer
+from repro.sim.traces import request_stream, workload_family
+
+
+# --------------------------------------------------------------- fixture
+def montage_mini(base: int = 0, arrival: float = 0.0, wid: int = 0,
+                 ) -> list[Job]:
+    """A Montage-shaped mini DAG (18 tasks, 1 node each). Integer runtimes
+    chosen so no finish lands on a scan (3 s) or release-check (60 s) tick
+    — equal-instant event ordering is the one place the discrete heap and
+    a tick loop could legally diverge, so the parity fixture keeps every
+    decision at a unique instant."""
+    jobs: list[Job] = []
+    jid = base
+
+    def add(name, rt, deps):
+        nonlocal jid
+        jobs.append(Job(jid=jid, arrival=arrival, runtime=float(rt), nodes=1,
+                        deps=tuple(deps), wid=wid, name=f"w{wid}/{name}"))
+        jid += 1
+        return jid - 1
+
+    proj = [add(f"proj-{i}", 4, []) for i in range(3)]
+    diff = [add(f"diff-{i}", 4, [proj[i % 3], proj[(i + 1) % 3]])
+            for i in range(6)]
+    concat = add("concat", 5, diff)
+    bg = add("bgmodel", 4, [concat])
+    back = [add(f"back-{i}", 4, [bg, proj[i]]) for i in range(3)]
+    tbl = add("imgtbl", 5, back)
+    madd = add("madd", 4, [tbl])
+    shrink = add("shrink", 4, [madd])
+    add("jpeg", 4, [shrink])
+    return jobs
+
+
+PARITY_POLICY = MgmtPolicy(initial=1, ratio=1.0, scan_interval=3.0,
+                           release_interval=60.0)
+# the scripted grant sequence: a co-tenant fills the platform before the
+# first scan (the env's DR1 parks), then frees 2 nodes BETWEEN scans (the
+# deferred grant lands through the admission queue, not a scan poll), then
+# frees the rest late
+PARITY_CONTENTION = [(1.0, "hog", 7), (4.0, "hog", -2), (80.0, "hog", -5)]
+PARITY_CAPACITY = 8
+PARITY_W1 = montage_mini(0, 0.0, 0)
+PARITY_W2 = montage_mini(100, 31.0, 1)
+
+
+def _run_parity_sim():
+    jobs = [j.fresh() for j in PARITY_W1 + PARITY_W2]
+    wl = Workload("parity-serve", "mtc", jobs, trace_nodes=3, period=600.0)
+    sim = Sim()
+    prov = ResourceProvider(PARITY_CAPACITY, coordination="first-come")
+    srv = REServer(sim, wl, prov, mode="dsp", policy=PARITY_POLICY)
+    for t, tre, d in PARITY_CONTENTION:
+        if d > 0:
+            sim.at(t, prov.request, tre, d, t)
+        else:
+            sim.at(t, prov.release, tre, -d, t)
+    sim.run()
+    deltas = [(e.t, e.delta) for e in prov.adjust_events
+              if e.tre == "parity-serve"]
+    order = [j.name for j in srv.env.completed]
+    times = {j.name: (j.start, j.finish) for j in jobs}
+    return deltas, order, times
+
+
+def _run_parity_serve():
+    w1 = [j.fresh() for j in PARITY_W1]
+    w2 = [j.fresh() for j in PARITY_W2]
+    prov = ResourceProvider(PARITY_CAPACITY, coordination="first-come")
+    drv = ServeDriver([(0.0, w1), (31.0, w2)], provider=prov,
+                      engine=EmulatedEngine(PARITY_CAPACITY),
+                      policy=PARITY_POLICY, name="parity-serve",
+                      contention=PARITY_CONTENTION)
+    stats = drv.run()
+    deltas = [(e.t, e.delta) for e in prov.adjust_events
+              if e.tre == "parity-serve"]
+    order = [j.name for j in drv.env.completed]
+    times = {j.name: (j.start, j.finish) for j in w1 + w2}
+    return deltas, order, times, stats
+
+
+# ---------------------------------------------------------------- parity
+def test_emulator_serve_parity_bit_identical():
+    """The same MTCRuntimeEnv under the discrete-event clock and under the
+    tick-driven serve driver must make identical decisions on the same DAG
+    and grant sequence: lease adjustments (values AND instants), per-task
+    start/finish times, and completion order."""
+    sim_deltas, sim_order, sim_times = _run_parity_sim()
+    drv_deltas, drv_order, drv_times, stats = _run_parity_serve()
+    assert sim_deltas == drv_deltas
+    assert sim_order == drv_order
+    assert sim_times == drv_times
+    # the sequence exercised the interesting paths, not just no-ops:
+    # initial B, an inline DR1 grant, the deferred admission-queue grant
+    # at the hog's release instant (t=4, between scans), and the destroy
+    assert drv_deltas == [(0.0, 1), (4.0, 1), (12.0, 1), (79.0, -3)]
+    assert stats.deferred_grants == 1 and stats.deferred_nodes == 1
+    assert stats.over_admissions == 0
+    assert stats.workflows_completed == 2
+
+
+def test_serve_parity_env_state_agrees_mid_run():
+    """Dynamic blocks and owned nodes agree between drivers at a mid-run
+    instant (not just at the end)."""
+    jobs = [j.fresh() for j in PARITY_W1 + PARITY_W2]
+    wl = Workload("parity-serve", "mtc", jobs, trace_nodes=3, period=600.0)
+    sim = Sim()
+    prov_s = ResourceProvider(PARITY_CAPACITY, coordination="first-come")
+    srv = REServer(sim, wl, prov_s, mode="dsp", policy=PARITY_POLICY)
+    for t, tre, d in PARITY_CONTENTION:
+        if d > 0:
+            sim.at(t, prov_s.request, tre, d, t)
+        else:
+            sim.at(t, prov_s.release, tre, -d, t)
+    sim.run(until=41.0)
+
+    prov_l = ResourceProvider(PARITY_CAPACITY, coordination="first-come")
+    drv = ServeDriver([(0.0, [j.fresh() for j in PARITY_W1]),
+                       (31.0, [j.fresh() for j in PARITY_W2])],
+                      provider=prov_l, engine=EmulatedEngine(PARITY_CAPACITY),
+                      policy=PARITY_POLICY, name="parity-serve",
+                      contention=PARITY_CONTENTION)
+    drv._tick(0)
+    for k in range(1, 42):
+        drv.clock.advance(1.0)
+        drv._tick(k)
+    assert srv.env.engine.dynamic_blocks == drv.env.engine.dynamic_blocks
+    assert srv.env.owned == drv.env.owned
+    assert srv.env.busy == drv.env.busy
+
+
+# ------------------------------------------------- request-DAG emission
+def test_request_stream_rekeys_and_marks():
+    fam = workload_family(0, 3, seed=0, jobs_scale=0.05)
+    stream = request_stream(fam, period=600.0, seed=0)
+    assert len(stream) == 3
+    assert stream[0][0] == 0.0                      # never empty-headed
+    assert [t for t, _ in stream] == sorted(t for t, _ in stream)
+    all_jobs = [j for _, jobs in stream for j in jobs]
+    jids = [j.jid for j in all_jobs]
+    assert len(set(jids)) == len(jids)              # globally unique
+    for _, jobs in stream:
+        local = {j.jid for j in jobs}
+        for j in jobs:
+            assert set(j.deps) <= local             # deps stay in-workflow
+            assert j.arrival == jobs[0].arrival
+            assert j.decode_len >= 1                # token-length marks
+            assert j.prompt_len in (4, 6, 8)
+    # deterministic per seed
+    again = request_stream(workload_family(0, 3, seed=0, jobs_scale=0.05),
+                           period=600.0, seed=0)
+    assert [(t, [(j.jid, j.decode_len, j.prompt_len) for j in jobs])
+            for t, jobs in stream] == \
+        [(t, [(j.jid, j.decode_len, j.prompt_len) for j in jobs])
+         for t, jobs in again]
+
+
+def test_request_stream_skips_htc():
+    fam = workload_family(2, 1, seed=0, jobs_scale=0.02)
+    stream = request_stream(fam, period=600.0, seed=0)
+    assert len(stream) == 1                         # only the MTC workload
+
+
+# ----------------------------------------- backpressure / driver smoke
+def test_serve_driver_trace_stream_under_contention():
+    """A multi-workflow stream against a tight shared platform: deferred
+    grants land, roots queue under backpressure, everything completes,
+    zero over-admissions."""
+    fam = workload_family(0, 12, seed=0, jobs_scale=0.05)
+    stream = request_stream(fam, period=900.0, seed=0)
+    prov = ResourceProvider(48, coordination="first-come")
+    drv = ServeDriver(
+        stream, provider=prov, engine=EmulatedEngine(48),
+        policy=MgmtPolicy(initial=4, ratio=2.0, scan_interval=3.0,
+                          release_interval=300.0),
+        contention=[(1.0, "neighbors", 40), (400.0, "neighbors", -20),
+                    (700.0, "neighbors", -20)])
+    stats = drv.run()
+    assert stats.workflows_completed == len(stream)
+    assert stats.tasks_completed == sum(len(jobs) for _, jobs in stream)
+    assert stats.deferred_grants > 0        # the admission queue worked
+    assert stats.over_admissions == 0       # backpressure held
+    assert stats.queue_peak > stats.peak_owned   # roots really queued
+    assert prov.total_allocated == 0        # destroy closed every lease
+    assert stats.node_hours > 0
+
+
+def test_serve_driver_dedicated_baseline_mode():
+    """fixed_nodes mode: a dedicated engine serves the same stream with no
+    negotiation — the benchmark's baseline side."""
+    fam = workload_family(0, 4, seed=1, jobs_scale=0.05)
+    stream = request_stream(fam, period=300.0, seed=1)
+    prov = ProvisionService()
+    drv = ServeDriver(stream, provider=prov, engine=EmulatedEngine(32),
+                      fixed_nodes=32)
+    stats = drv.run()
+    assert stats.workflows_completed == len(stream)
+    assert stats.over_admissions == 0
+    assert stats.peak_owned == 32           # never renegotiated
+    assert stats.deferred_grants == 0
+
+
+# ------------------------------------------------------ property tests
+def _dag_from_spec(spec: list[tuple[int, int]], wid: int = 0,
+                   base: int = 0) -> list[Job]:
+    """(runtime, n_back_deps) tuples -> a DAG where task i depends on up
+    to n of its immediate predecessors."""
+    jobs = []
+    for i, (rt, nd) in enumerate(spec):
+        deps = tuple(base + j for j in range(max(i - nd, 0), i))
+        jobs.append(Job(jid=base + i, arrival=0.0, runtime=float(rt),
+                        nodes=1, deps=deps, wid=wid, name=f"t{base + i}"))
+    return jobs
+
+
+def _run_dag(spec, capacity, hold, policy=None):
+    """Drive a random DAG under scripted contention; the driver's strict
+    mode asserts slots <= granted and engine == env.busy at every tick."""
+    jobs = _dag_from_spec(spec)
+    hold = min(hold, capacity - 1)
+    contention = ([(1.0, "hog", hold), (100.0, "hog", -hold)]
+                  if hold > 0 else [])
+    prov = ResourceProvider(capacity, coordination="first-come")
+    drv = ServeDriver(
+        [(0.0, jobs)], provider=prov, engine=EmulatedEngine(capacity),
+        policy=policy or MgmtPolicy(initial=1, ratio=1.0, scan_interval=3.0,
+                                    release_interval=60.0),
+        contention=contention, strict=True)
+    stats = drv.run()
+    return jobs, stats, prov
+
+
+def _assert_invariants(jobs, stats, prov):
+    by_jid = {j.jid: j for j in jobs}
+    # liveness: every admitted request finished (nothing lost in a queue)
+    assert stats.tasks_completed == len(jobs)
+    assert all(j.finish >= 0 for j in jobs)
+    # trigger monitor: no task launched before its dependencies completed
+    for j in jobs:
+        for d in j.deps:
+            assert by_jid[d].finish <= j.start, (j.name, d)
+    # backpressure: the engine never held more requests than granted nodes
+    assert stats.over_admissions == 0
+    # teardown: the TRE's leases are all closed
+    assert prov.allocated.get("mtc-serve", 0) == 0
+
+
+@given(st.lists(st.tuples(st.integers(1, 9), st.integers(0, 3)),
+                min_size=1, max_size=24),
+       st.integers(2, 8), st.integers(0, 6))
+@settings(max_examples=40, deadline=None)
+def test_property_deps_liveness_slots(spec, capacity, hold):
+    """Random DAGs x random platform sizes x random co-tenant holds: no
+    task launches before its deps complete, every admitted request
+    eventually finishes, engine slots never exceed granted nodes."""
+    jobs, stats, prov = _run_dag(spec, capacity, hold)
+    _assert_invariants(jobs, stats, prov)
+
+
+@given(st.lists(st.integers(1, 6), min_size=1, max_size=16),
+       st.integers(1, 5))
+@settings(max_examples=30, deadline=None)
+def test_property_chain_is_strictly_sequential(runtimes, capacity):
+    """A pure dependency chain can never overlap, whatever the slot
+    supply: finish(i) <= start(i+1) and exactly one slot is ever busy."""
+    spec = [(rt, 1) for rt in runtimes]
+    jobs, stats, prov = _run_dag(spec, capacity + 1, 0)
+    _assert_invariants(jobs, stats, prov)
+    for a, b in zip(jobs, jobs[1:]):
+        assert a.finish <= b.start
+    assert stats.peak_owned <= capacity + 1
+    assert stats.busy_node_ticks == sum(int(rt) for rt in runtimes)
+
+
+def test_driver_invariants_deterministic():
+    """Shim-proof versions of the property checks (run even without
+    hypothesis installed): a mix of wide, deep and diamond DAGs under
+    tight and ample platforms."""
+    cases = [
+        ([(3, 0)] * 8, 3, 1),                    # wide, starved platform
+        ([(2, 1)] * 10, 4, 2),                   # chain under contention
+        ([(4, 0), (2, 1), (2, 2), (5, 3)], 2, 0),  # diamond-ish, tiny pool
+        ([(1, 0)] * 20, 8, 6),                   # burst of singletons
+    ]
+    for spec, cap, hold in cases:
+        jobs, stats, prov = _run_dag(spec, cap, hold)
+        _assert_invariants(jobs, stats, prov)
+
+
+# -------------------------------------------------- real-engine serving
+@pytest.fixture(scope="module")
+def musicgen_engine():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.configs.base import ParallelConfig
+    from repro.models.lm import LM
+    from repro.serve.engine import Engine
+
+    cfg = get_smoke_config("musicgen-large")
+    lm = LM(cfg)
+    rt = lm.runtime(ParallelConfig(attn_q_chunk=16, attn_kv_chunk=16))
+    params = lm.init(jax.random.key(0))[0]
+    return Engine(lm, params, rt, max_batch=4, max_len=48)
+
+
+def test_real_engine_serves_workflow_dag(musicgen_engine):
+    """The same driver against the actual jax continuous-batching engine:
+    a Montage DAG becomes real prefill/decode traffic, slots are granted
+    by the provider, and the trigger monitor's order is preserved."""
+    jobs = montage_mini()
+    wl = Workload("mini", "mtc", [j.fresh() for j in jobs],
+                  trace_nodes=3, period=600.0)
+    stream = request_stream([wl], period=600.0, seed=0,
+                            seconds_per_token=2.0, prompt_lens=(4, 6))
+    prov = ResourceProvider(4, coordination="first-come")
+    drv = ServeDriver(
+        stream, provider=prov,
+        engine=JaxEngineAdapter(musicgen_engine, seed=0),
+        policy=MgmtPolicy(initial=2, ratio=1.0, scan_interval=3.0,
+                          release_interval=60.0))
+    stats = drv.run()
+    assert stats.tasks_completed == len(jobs)
+    assert stats.over_admissions == 0
+    # engine reusable: every slot freed
+    assert len(musicgen_engine.free) == 4 and not musicgen_engine.active
+    # dependency order respected in the completion sequence
+    pos = {j.jid: i for i, j in enumerate(drv.env.completed)}
+    for j in drv.env.completed:
+        for d in j.deps:
+            assert pos[d] < pos[j.jid]
+
+
+def test_batched_admit_matches_single_admit(musicgen_engine):
+    """admit_many's grouped prefill must produce the same greedy tokens
+    as one-at-a-time admission (continuous-batching invariance)."""
+    from repro.serve.engine import Request
+
+    eng = musicgen_engine
+    ncb = eng.lm.cfg.n_codebooks
+
+    def reqs(seed):
+        r = np.random.default_rng(seed)
+        return [Request(rid=i,
+                        tokens=r.integers(1, eng.lm.cfg.vocab_size,
+                                          (4, ncb)).astype(np.int32),
+                        max_new_tokens=3) for i in range(3)]
+
+    solo_out = []
+    for req in reqs(11):
+        assert eng.admit(req)
+        while eng.active:
+            eng.step()
+        solo_out.append(np.asarray(req.out_tokens))
+    batch = reqs(11)
+    admitted = eng.admit_many(batch)
+    assert len(admitted) == 3
+    done = []
+    while eng.active:
+        done.extend(eng.step())
+    assert len(done) == 3
+    for req, ref in zip(batch, solo_out):
+        np.testing.assert_array_equal(np.asarray(req.out_tokens), ref)
+
+
+def test_admit_many_finishes_in_call_order_across_shape_groups(
+        musicgen_engine):
+    """Same-step finishes come back in ADMISSION order even when the
+    batch spans prompt-shape groups (prefill grouping must not reorder
+    the finish sequence the env observes)."""
+    from repro.serve.engine import Request
+
+    eng = musicgen_engine
+    ncb = eng.lm.cfg.n_codebooks
+    r = np.random.default_rng(3)
+    plens = (4, 6, 4, 6)                   # interleaved shape groups
+    batch = [Request(rid=i,
+                     tokens=r.integers(1, eng.lm.cfg.vocab_size,
+                                       (p, ncb)).astype(np.int32),
+                     max_new_tokens=3) for i, p in enumerate(plens)]
+    assert len(eng.admit_many(batch)) == 4
+    done = []
+    while eng.active:
+        done.extend(eng.step())
+    assert [req.rid for req in done] == [0, 1, 2, 3]
+
+
+def test_admit_many_oversize_raises_without_leaking_slots(musicgen_engine):
+    """An oversize request anywhere in the batch must fail the call
+    before any slot is consumed (no capacity leak, no half-admits)."""
+    from repro.serve.engine import Request
+
+    eng = musicgen_engine
+    ncb = eng.lm.cfg.n_codebooks
+    r = np.random.default_rng(5)
+    ok = Request(rid=0, tokens=r.integers(1, eng.lm.cfg.vocab_size,
+                                          (4, ncb)).astype(np.int32),
+                 max_new_tokens=3)
+    oversize = Request(rid=1, tokens=r.integers(1, eng.lm.cfg.vocab_size,
+                                                (40, ncb)).astype(np.int32),
+                       max_new_tokens=40)
+    free_before = len(eng.free)
+    with pytest.raises(ValueError, match="cache capacity"):
+        eng.admit_many([ok, oversize])
+    assert len(eng.free) == free_before and not eng.active

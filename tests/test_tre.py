@@ -11,7 +11,9 @@ from repro.core.registry import (
     System, available_systems, get_system, register_system,
 )
 from repro.core.registry import _REGISTRY
-from repro.core.scheduling import SCHEDULERS, backfill, resolve_scheduler
+from repro.core.scheduling import (
+    SCHEDULERS, backfill, easy_backfill, resolve_scheduler,
+)
 from repro.core.controller import ElasticController, TrainTask
 from repro.core.tre import HTCRuntimeEnv, TickClock
 from repro.core.types import Job, Workload
@@ -310,8 +312,8 @@ def test_dcs_deploy_is_not_an_adjustment_ssp_lease_is():
 
 # ------------------------------------------------------------------ registry
 def test_registry_knows_all_usage_models():
-    assert {"dcs", "ssp", "drp", "dawningcloud",
-            "dawningcloud-backfill"} <= set(available_systems())
+    assert {"dcs", "ssp", "drp", "dawningcloud", "dawningcloud-backfill",
+            "dawningcloud-easy"} <= set(available_systems())
     assert get_system("dawningcloud").name == "dawningcloud"
 
 
@@ -422,6 +424,72 @@ def test_scheduler_override_through_system_api():
     # first-fit lets job 2 jump in and delay the head ~20000 s; backfill
     # holds it back, so the head's (and mean) wait is far smaller
     assert bf.per_workload["bf"].mean_wait_s < ff.per_workload["bf"].mean_wait_s
+
+
+# -------------------------------------------------------------- EASY backfill
+def test_easy_registered():
+    assert SCHEDULERS["easy"] is easy_backfill
+    assert resolve_scheduler("easy", "htc") is easy_backfill
+
+
+def test_easy_never_delays_reserved_head():
+    """The EASY guarantee: the blocked head's reserved start is
+    inviolable. A fill whose runtime would eat into the head's node
+    reservation at its shadow time must be refused."""
+    queue = [_j(0, 35, 100.0), _j(1, 30, 250.0)]
+    # 30 free now, 30 more at t=100 -> head (35 wide) reserves t=100;
+    # the 30-node fill would leave only 60-30=30 < 35 there -> refused
+    assert easy_backfill(queue, 30, now=0.0, running=((100.0, 30),),
+                         busy=30) == []
+    # a fill that fits under the head's reservation may start
+    queue2 = [_j(0, 35, 100.0), _j(1, 20, 250.0)]
+    assert easy_backfill(queue2, 30, now=0.0, running=((100.0, 30),),
+                         busy=30) == [queue2[1]]
+
+
+def test_easy_fills_where_conservative_refuses():
+    """EASY reserves ONLY the head: a fill that would push back a
+    mid-queue job's (conservative) reservation still starts, because EASY
+    grants that job no reservation — the aggressive/conservative split."""
+    queue = [_j(0, 35, 100.0), _j(1, 40, 100.0), _j(2, 22, 250.0)]
+    assert backfill(queue, 30, now=0.0, running=((100.0, 30),),
+                    busy=30) == []                       # job 1's slot held
+    assert easy_backfill(queue, 30, now=0.0, running=((100.0, 30),),
+                         busy=30) == [queue[2]]          # EASY fills
+
+
+def test_easy_degrades_to_fcfs_without_release_profile():
+    queue = [_j(0, 50, 100.0), _j(1, 10, 40.0)]
+    assert easy_backfill(queue, 30, now=0.0, running=(), busy=30) == []
+    assert easy_backfill(queue, 30, now=0.0, running=((50.0, 30),),
+                         busy=30) == [queue[1]]
+
+
+def test_easy_plain_start_when_everything_fits():
+    queue = [_j(0, 4, 60.0), _j(1, 2, 60.0)]
+    assert easy_backfill(queue, 8, now=0.0, running=(), busy=0) == queue
+
+
+def test_dawningcloud_easy_scenario_head_start_matches_conservative():
+    """dawningcloud-easy runs consolidated and keeps the conservative
+    variant's head guarantee: the blocked wide head starts no later than
+    under conservative backfill, while the long narrow job behind it is
+    still held off the head's reservation."""
+    def mk():
+        return Workload("bf", "htc", [
+            Job(jid=0, arrival=0.0, runtime=7000.0, nodes=2),
+            Job(jid=1, arrival=120.0, runtime=600.0, nodes=4),   # wide head
+            Job(jid=2, arrival=180.0, runtime=20000.0, nodes=2),
+        ], trace_nodes=4, period=14400.0)
+
+    pol = {"bf": MgmtPolicy.htc(4, 100.0)}    # never grows: pure scheduling
+    easy = run_system("dawningcloud-easy", [mk()], policies=pol)
+    cons = run_system("dawningcloud-backfill", [mk()], policies=pol)
+    assert easy.per_workload["bf"].completed_total == 3
+    # identical decisions on this stream: the head job (jid 1) starts at
+    # the long job's release in both variants
+    assert easy.per_workload["bf"].mean_wait_s == \
+        cons.per_workload["bf"].mean_wait_s
 
 
 def test_dawningcloud_backfill_scenario_runs_consolidated():
