@@ -1,0 +1,173 @@
+"""Cross-PR benchmark regression gate.
+
+Compares a freshly produced ``BENCH_*.json`` against the committed
+baseline in ``benchmarks/baselines/`` and fails (exit 1) when a key
+metric regresses beyond tolerance.  Metrics are directional:
+
+  - ``lower``  is better (billed ratios): fail when
+    ``current > baseline * (1 + tol)``
+  - ``higher`` is better (utilization, throughput): fail when
+    ``current < baseline * (1 - tol)``
+  - ``zero``   is an invariant (over-admissions, isolation violations):
+    fail when nonzero, regardless of tolerance
+
+Baselines are generated with ``--smoke`` (the CI configuration); the
+checker refuses to compare runs whose configs differ, so a smoke run is
+never judged against a full-sweep baseline.
+
+Usage (what CI runs, one line per benchmark)::
+
+    python benchmarks/check_regression.py BENCH_serve_fleet.json
+    python benchmarks/check_regression.py BENCH_scale_curve.json --tol 0.2
+
+To refresh a baseline after an intentional change, rerun the benchmark
+with ``--smoke`` and copy the JSON into ``benchmarks/baselines/``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BASELINE_DIR = Path(__file__).resolve().parent / "baselines"
+
+# benchmark name -> (row extractor, row key fields, {metric: direction})
+# The extractor returns a list of comparable rows; rows are matched
+# between current and baseline by the key fields.
+SPECS: dict[str, dict] = {
+    "serve_fleet": {
+        "rows": lambda d: d["runs"],
+        "key": ("n_tenants", "policy"),
+        "metrics": {
+            "billed_vs_dedicated": "lower",
+            "slots_vs_dedicated": "lower",
+            "slot_utilization": "higher",
+            "over_admissions": "zero",
+            "isolation_violations": "zero",
+        },
+    },
+    "scale_curve": {
+        "rows": lambda d: d["curve"],
+        "key": ("n_providers",),
+        "metrics": {
+            "billed_vs_dcs": "lower",
+            "platform_vs_dcs": "lower",
+            "completed_fraction": "higher",
+        },
+    },
+    "serve_trace": {
+        # single-cell benchmark: synthesize one row from the top level
+        "rows": lambda d: [{
+            "cell": "dsp-vs-dedicated",
+            "utilization_gain": d["utilization_gain"],
+            "throughput_ratio": d["throughput_ratio"],
+            "billed_ratio": d["billed_ratio"],
+            "over_admissions": d["dsp"]["over_admissions"],
+        }],
+        "key": ("cell",),
+        "metrics": {
+            "utilization_gain": "higher",
+            "throughput_ratio": "higher",
+            "billed_ratio": "lower",
+            "over_admissions": "zero",
+        },
+    },
+}
+
+
+# execution details that vary by machine without affecting results
+CONFIG_IGNORE = ("procs",)
+
+
+def _row_key(row: dict, fields: tuple[str, ...]) -> tuple:
+    return tuple(row[f] for f in fields)
+
+
+def _comparable_config(d: dict) -> dict:
+    cfg = dict(d.get("config") or {})
+    for k in CONFIG_IGNORE:
+        cfg.pop(k, None)
+    return cfg
+
+
+def compare(current: dict, baseline: dict, tol: float) -> list[str]:
+    """Return a list of human-readable regression messages (empty = ok)."""
+    name = current.get("benchmark")
+    if name != baseline.get("benchmark"):
+        return [f"benchmark mismatch: current={name!r} "
+                f"baseline={baseline.get('benchmark')!r}"]
+    spec = SPECS.get(name)
+    if spec is None:
+        return [f"no regression spec for benchmark {name!r} "
+                f"(known: {sorted(SPECS)})"]
+    cur_cfg, base_cfg = _comparable_config(current), _comparable_config(baseline)
+    if cur_cfg != base_cfg:
+        return [f"config mismatch for {name}: refusing to compare "
+                f"(current={cur_cfg} baseline={base_cfg}); regenerate the "
+                f"baseline with the same flags"]
+
+    failures: list[str] = []
+    base_rows = {_row_key(r, spec["key"]): r for r in spec["rows"](baseline)}
+    cur_rows = {_row_key(r, spec["key"]): r for r in spec["rows"](current)}
+    for key in base_rows.keys() - cur_rows.keys():
+        failures.append(f"{name}{key}: row missing from current run")
+    for key, cur in sorted(cur_rows.items(), key=str):
+        base = base_rows.get(key)
+        if base is None:
+            continue  # new row (e.g. an added N): nothing to regress against
+        for metric, direction in spec["metrics"].items():
+            c, b = cur[metric], base[metric]
+            if direction == "zero":
+                if c != 0:
+                    failures.append(f"{name}{key}: {metric} = {c} "
+                                    f"(invariant: must be 0)")
+            elif direction == "lower":
+                if c > b * (1 + tol):
+                    failures.append(f"{name}{key}: {metric} rose "
+                                    f"{b:.4g} -> {c:.4g} "
+                                    f"(tolerance {tol:.0%})")
+            elif direction == "higher":
+                if c < b * (1 - tol):
+                    failures.append(f"{name}{key}: {metric} fell "
+                                    f"{b:.4g} -> {c:.4g} "
+                                    f"(tolerance {tol:.0%})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="freshly produced BENCH_*.json")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (default: benchmarks/baselines/"
+                         "<same filename>)")
+    ap.add_argument("--tol", type=float, default=0.15,
+                    help="relative tolerance for directional metrics")
+    args = ap.parse_args(argv)
+
+    cur_path = Path(args.current)
+    base_path = (Path(args.baseline) if args.baseline
+                 else BASELINE_DIR / cur_path.name)
+    if not base_path.exists():
+        print(f"check_regression: no baseline at {base_path}; "
+              f"commit one to enable the gate", file=sys.stderr)
+        return 1
+    current = json.loads(cur_path.read_text())
+    baseline = json.loads(base_path.read_text())
+
+    failures = compare(current, baseline, args.tol)
+    if failures:
+        print(f"check_regression: {cur_path.name} REGRESSED "
+              f"vs {base_path}:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    name = current["benchmark"]
+    n_rows = len(SPECS[name]["rows"](current))
+    print(f"check_regression: {cur_path.name} ok "
+          f"({n_rows} rows within {args.tol:.0%} of {base_path})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

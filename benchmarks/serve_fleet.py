@@ -1,0 +1,257 @@
+"""Multi-tenant serve-fleet benchmark: the economies-of-scale curve for
+the SERVING path — N tenant streams consolidated on one engine pool vs N
+dedicated engines.
+
+For each tenant count N and coordination policy (``first-come`` vs
+``coordinated``):
+
+  - **dedicated baseline**: every tenant gets its own fixed engine sized
+    at its own *eager-execution peak* — the slot count that serves every
+    workflow with zero queueing delay, the serving analogue of the
+    paper's DCS configuration (Montage's "accumulated parallel demand
+    ~166 nodes") — and replays its workflow stream through a standalone
+    ``ServeDriver`` with no negotiation; billed node-hours = its engine
+    held for its whole run.
+  - **consolidated fleet**: the same N streams on ONE
+    ``PartitionedEngine`` pool sized at the *fleet-wide* peak
+    hourly-averaged offered decode load (statistical multiplexing: the
+    peak of the sum grows sublinearly while the sum of peaks is linear),
+    slots partitioned by the provider's coordination policy, DSP
+    management policies per tenant (elastic grow/release), deferred
+    grants through the admission queue, finished tenants destroyed
+    mid-run so their slots serve the stragglers.
+
+Every consolidated cell must complete every workflow with ZERO
+over-admissions and ZERO isolation violations (``strict=True`` raises on
+either at the offending tick — checks that survive ``python -O``), and
+for N >= 3 its per-tenant billed node-hours must come in under the
+dedicated baseline under BOTH policies — asserted, not just reported.
+
+Output: ``BENCH_serve_fleet.json`` (CI uploads it as an artifact and
+``benchmarks/check_regression.py`` gates it against the committed
+baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+from repro.core.policy import MgmtPolicy
+from repro.core.provision import ProvisionService
+from repro.serve.driver import EmulatedEngine, ServeDriver
+from repro.serve.fleet import ServeFleet, ServeFleetSystem, rekey_disjoint
+from repro.sim.traces import request_stream, workload_family
+
+
+def _require(cond: bool, msg: str) -> None:
+    """Acceptance-gate check that survives ``python -O`` (unlike assert)."""
+    if not cond:
+        raise RuntimeError(f"serve_fleet gate: {msg}")
+
+
+def eager_peak_slots(stream) -> int:
+    """Peak instantaneous slot demand of the stream under eager execution
+    (every task decodes the moment its dependencies finish): the engine
+    size a dedicated provider must own to serve with zero queueing delay
+    — the DCS-configuration analogue for the serving path."""
+    events: list[tuple[float, int]] = []
+    for t0, jobs in stream:
+        start: dict[int, float] = {}
+        end: dict[int, float] = {}
+        remaining = list(jobs)
+        while remaining:
+            rest = []
+            for j in remaining:
+                if all(d in end for d in j.deps):
+                    s = max((end[d] for d in j.deps), default=0.0)
+                    start[j.jid] = s
+                    end[j.jid] = s + max(j.decode_len, 1)
+                else:
+                    rest.append(j)
+            if len(rest) == len(remaining):
+                raise ValueError("dependency cycle in stream entry")
+            remaining = rest
+        for j in jobs:
+            events.append((t0 + start[j.jid], 1))
+            events.append((t0 + end[j.jid], -1))
+    events.sort()
+    peak = level = 0
+    for _, d in events:
+        level += d
+        peak = max(peak, level)
+    return max(peak, 1)
+
+
+def tenant_streams(n_tenants: int, workflows: int, seed: int,
+                   jobs_scale: float, period: float):
+    """One workflow arrival stream per tenant (disjoint jid ranges): each
+    tenant is its own MTC service provider with its own seeded
+    ``workload_family`` of Montage-shaped mosaics."""
+    streams = []
+    for t in range(n_tenants):
+        fam = workload_family(0, workflows, seed=seed * 1009 + t,
+                              jobs_scale=jobs_scale)
+        streams.append(request_stream(fam, period=period, seed=seed + t))
+    return rekey_disjoint(streams)
+
+
+def run_dedicated(streams, *, policy: MgmtPolicy) -> dict:
+    """N dedicated engines: per-tenant fixed slots, no negotiation."""
+    t0 = time.perf_counter()
+    total = {"node_hours": 0.0, "slots": 0, "workflows": 0, "tasks": 0,
+             "over_admissions": 0, "busy": 0.0, "owned": 0.0,
+             "makespan_s": 0.0}
+    for i, stream in enumerate(streams):
+        slots = max(eager_peak_slots(stream), policy.initial)
+        drv = ServeDriver(stream, provider=ProvisionService(),
+                          engine=EmulatedEngine(slots), fixed_nodes=slots,
+                          name=f"dedicated-t{i}")
+        st = drv.run()
+        _require(st.workflows_completed == st.workflows_expected,
+                 f"dedicated tenant {i} completed {st.workflows_completed}"
+                 f"/{st.workflows_expected} workflows")
+        _require(st.over_admissions == 0,
+                 f"dedicated tenant {i} over-admitted {st.over_admissions}")
+        total["node_hours"] += st.node_hours
+        total["slots"] += slots
+        total["workflows"] += st.workflows_completed
+        total["tasks"] += st.tasks_completed
+        total["busy"] += st.busy_node_ticks
+        total["owned"] += st.owned_node_ticks
+        total["makespan_s"] = max(total["makespan_s"], st.makespan_s)
+    total["slot_utilization"] = (total["busy"] / total["owned"]
+                                 if total["owned"] else 0.0)
+    total["wall_s"] = time.perf_counter() - t0
+    return total
+
+
+def run_consolidated(streams, *, coordination: str,
+                     policy: MgmtPolicy) -> dict:
+    """The fleet: one pool sized at the fleet-wide hourly decode peak."""
+    n = len(streams)
+    policies = [policy] * n
+    # size the pool exactly as the registered scenario would: one source
+    # of truth for the hourly-peak estimate and the liveness floor
+    capacity = ServeFleetSystem().default_capacity(streams, policies)
+    fleet = ServeFleet(streams, engine=EmulatedEngine(capacity),
+                       coordination=coordination, policies=policies,
+                       name=f"fleet-{coordination}-n{n}")
+    t0 = time.perf_counter()
+    fs = fleet.run()
+    wall = time.perf_counter() - t0
+    _require(fs.workflows_completed == fs.workflows_expected,
+             f"{coordination} N={n} completed {fs.workflows_completed}"
+             f"/{fs.workflows_expected} workflows")
+    _require(fs.over_admissions == 0,
+             f"{coordination} N={n} over-admitted {fs.over_admissions}")
+    _require(fs.isolation_violations == 0,
+             f"{coordination} N={n} had {fs.isolation_violations} "
+             f"slot-isolation violations")
+    out = fs.as_dict()
+    out["wall_s"] = wall
+    return out
+
+
+def run_cell(streams, *, coordination: str, policy: MgmtPolicy,
+             dedicated: dict) -> dict:
+    n = len(streams)
+    fleet = run_consolidated(streams, coordination=coordination,
+                             policy=policy)
+    row = {
+        "n_tenants": n,
+        "policy": coordination,
+        "capacity": fleet["capacity"],
+        "dedicated_slots": dedicated["slots"],
+        "slots_vs_dedicated": fleet["capacity"] / max(dedicated["slots"], 1),
+        "billed_node_hours": fleet["node_hours"],
+        "dedicated_node_hours": dedicated["node_hours"],
+        "billed_vs_dedicated": (fleet["node_hours"]
+                                / max(dedicated["node_hours"], 1e-12)),
+        "billed_per_tenant": fleet["node_hours"] / n,
+        "slot_utilization": fleet["slot_utilization"],
+        "pool_utilization": fleet["pool_utilization"],
+        "dedicated_utilization": dedicated["slot_utilization"],
+        "workflows": fleet["workflows_completed"],
+        "tasks": fleet["tasks_completed"],
+        "makespan_s": fleet["makespan_s"],
+        "makespan_vs_dedicated": (fleet["makespan_s"]
+                                  / max(dedicated["makespan_s"], 1e-12)),
+        "deferred_grants": fleet["deferred_grants"],
+        "deferred_nodes": fleet["deferred_nodes"],
+        "over_admissions": fleet["over_admissions"],
+        "isolation_violations": fleet["isolation_violations"],
+        "peak_pool_active": fleet["peak_pool_active"],
+        "wall_s": fleet["wall_s"],
+    }
+    # the acceptance gate: consolidation must pay off at fleet scale
+    if n >= 3:
+        _require(row["billed_vs_dedicated"] < 1.0,
+                 f"consolidated fleet bills "
+                 f"{row['billed_vs_dedicated']:.2f}x dedicated at N={n} "
+                 f"under {coordination}")
+    return row
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tenants", type=int, nargs="+", default=[1, 3, 6, 12])
+    ap.add_argument("--workflows", type=int, default=24,
+                    help="workflows per tenant")
+    ap.add_argument("--jobs-scale", type=float, default=0.05)
+    ap.add_argument("--period", type=float, default=3600.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep: fewer tenants, smaller mosaics")
+    ap.add_argument("--out", default="BENCH_serve_fleet.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.tenants = [1, 3, 6]
+        args.workflows = 10
+        args.jobs_scale = 0.04
+        args.period = 3600.0
+
+    # hourly release windows: dynamic blocks live at least one billing
+    # unit, so elastic growth does not thrash fresh lease-hours (§4.4(2))
+    policy = MgmtPolicy(initial=2, ratio=2.0, scan_interval=3.0,
+                        release_interval=3600.0)
+    runs = []
+    for n in args.tenants:
+        streams = tenant_streams(n, args.workflows, args.seed,
+                                 args.jobs_scale, args.period)
+        dedicated = run_dedicated(streams, policy=policy)
+        for coordination in ("first-come", "coordinated"):
+            runs.append(run_cell(streams, coordination=coordination,
+                                 policy=policy, dedicated=dedicated))
+
+    out = {
+        "benchmark": "serve_fleet",
+        "config": {"tenants": args.tenants, "workflows": args.workflows,
+                   "jobs_scale": args.jobs_scale, "period_s": args.period,
+                   "seed": args.seed, "smoke": args.smoke,
+                   "policy": {"initial": policy.initial,
+                              "ratio": policy.ratio,
+                              "release_interval": policy.release_interval}},
+        "runs": runs,
+    }
+    with open(args.out, "w") as fh:
+        json.dump(out, fh, indent=2)
+
+    n_tasks = {r["n_tenants"]: r["tasks"] for r in runs}
+    print(f"wrote {args.out} "
+          f"({sum(n_tasks.values())} tasks across {len(runs)} cells)")
+    print(f"{'N':>4s} {'policy':>12s} {'pool':>5s} {'dedic':>6s} "
+          f"{'billed':>8s} {'vs-dedic':>9s} {'util':>6s} {'defer':>6s}")
+    for r in runs:
+        print(f"{r['n_tenants']:>4d} {r['policy']:>12s} "
+              f"{r['capacity']:>5d} {r['dedicated_slots']:>6d} "
+              f"{r['billed_node_hours']:>8.0f} "
+              f"{r['billed_vs_dedicated']:>9.3f} "
+              f"{r['slot_utilization']:>6.1%} {r['deferred_grants']:>6d}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

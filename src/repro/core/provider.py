@@ -286,13 +286,21 @@ class ResourceProvider(ProvisionService):
         urgency (the env re-scans its queue every scan tick; a parked
         request must track the current need and priority, not the state
         at submission — coordinated arbitration orders by it). ``n <= 0``
-        cancels."""
+        cancels.
+
+        A *priority-only* change re-drains too: under ``coordinated``
+        arbitration the urgency ordering IS the grant decision, so an
+        urgency bump must be able to unblock a parked request right away —
+        not sit until an unrelated release happens to trigger a drain
+        (e.g. a request declined in an earlier drain whose tenant's
+        backlog has since refilled at the same width)."""
         if req.status != "queued":
             return req
         if n <= 0:
             self.cancel(req, t)
             return req
-        changed = n != req.nodes or min_useful != req.min_useful
+        changed = (n != req.nodes or min_useful != req.min_useful
+                   or (priority is not None and priority != req.priority))
         req.nodes = n
         req.min_useful = min_useful
         if priority is not None:
@@ -317,8 +325,12 @@ class ResourceProvider(ProvisionService):
             if t is None:
                 # never backdate a drain: a grant stamped before already-
                 # recorded allocation events would overbill the follower
-                # and break the alloc curve's time order
-                t = max(req.t, self._alloc_curve[-1][0])
+                # and break the alloc curve's time order. With no
+                # allocation event recorded yet the request's own
+                # submission time is the only defensible floor
+                last = self._alloc_curve[-1][0] if self._alloc_curve \
+                    else req.t
+                t = max(req.t, last)
             self._drain(t)
 
     def release(self, tre: str, n: int, t: float, *, count_adjust=True) -> None:
@@ -352,7 +364,14 @@ class ResourceProvider(ProvisionService):
                         ok = ProvisionService.request(
                             self, req.tre, take, t,
                             count_adjust=req.count_adjust)
-                        assert ok, (req.tre, take)
+                        if not ok:
+                            # the offer was clamped against live headroom
+                            # just above — a failure here means the ledger
+                            # and the arbitration overlay disagree, and
+                            # granting anyway would oversubscribe capacity
+                            raise RuntimeError(
+                                f"drain grant exceeds capacity: "
+                                f"{take} nodes to {req.tre!r} at t={t}")
                         req.granted += take
                         progress = True
                     if take == 0:

@@ -184,7 +184,12 @@ class ProvisionService:
         take = on_grant(n, t)
         if take > 0:
             ok = self.request(tre, take, t, count_adjust=count_adjust)
-            assert ok, (tre, take)
+            if not ok:
+                # availability was checked above and nothing ran between:
+                # a failure means the requester accepted more than offered
+                raise RuntimeError(
+                    f"grant exceeds capacity: {take} nodes to {tre!r} "
+                    f"(offered {n}) at t={t}")
             req.granted = take
             req.status = "granted"
         else:
@@ -212,7 +217,13 @@ class ProvisionService:
         """Passively reclaim ``n`` nodes (closes newest lease blocks first)."""
         if n <= 0:
             return
-        assert self.allocated.get(tre, 0) >= n, (tre, n, self.allocated)
+        held = self.allocated.get(tre, 0)
+        if held < n:
+            # guarded raise, not assert: releasing more than held would
+            # silently corrupt lease accounting under ``python -O``
+            raise RuntimeError(
+                f"release exceeds holding: {n} nodes from {tre!r} "
+                f"(holds {held}) at t={t}")
         self.allocated[tre] -= n
         remaining = n
         blocks = self.open_leases[tre]

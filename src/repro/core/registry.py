@@ -85,8 +85,10 @@ def register_system(name: str, *, replace: bool = False):
 
 def _ensure_builtin_systems() -> None:
     """The built-in usage models register as an import side effect of
-    ``repro.sim.systems``; make the accessors self-sufficient so
+    ``repro.sim.systems`` (emulated) and ``repro.serve.fleet`` (the
+    tick-driven serving fleet); make the accessors self-sufficient so
     ``from repro.core import available_systems`` works standalone."""
+    import repro.serve.fleet  # noqa: F401
     import repro.sim.systems  # noqa: F401
 
 

@@ -1,0 +1,34 @@
+"""jax API compatibility.
+
+``shard_map`` graduated from ``jax.experimental`` to the top level, and
+its knobs were renamed on the way (``check_rep`` -> ``check_vma``;
+"manual over these axes" went from the complement ``auto=frozenset(...)``
+to the direct ``axis_names={...}``). The sharded modules here are written
+against the current top-level API; on the older jax pinned in this
+container we adapt the call onto the experimental entry point.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name):
+        """``lax.axis_size`` predecessor: ``psum`` of a literal 1 is
+        constant-folded to the (static) mapped axis size."""
+        return jax.lax.psum(1, axis_name)
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=True):
+        auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+                if axis_names is not None else frozenset())
+        return _shard_map_legacy(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma,
+                                 auto=auto)

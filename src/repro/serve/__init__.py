@@ -1,4 +1,27 @@
-from repro.serve.engine import Engine, Request  # noqa: F401
+"""MTC serving: continuous-batching engine, trace-rate driver, fleet.
+
+``Engine``/``Request`` (the jax continuous-batching engine) are
+re-exported lazily so that importing the driver/fleet layers — which the
+system registry does to register ``dawningcloud-serve-fleet`` — never
+pulls jax into emulator-only processes (e.g. the scale-curve bench's
+worker pool)."""
 from repro.serve.driver import (  # noqa: F401
-    EmulatedEngine, JaxEngineAdapter, ServeDriver, ServeStats,
+    EmulatedEngine, JaxEngineAdapter, ServeDriver, ServeInvariantError,
+    ServeStats,
 )
+from repro.serve.fleet import (  # noqa: F401
+    FleetStats, PartitionedEngine, ServeFleet, TenantSlice,
+)
+
+_LAZY = ("Engine", "Request")
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        from repro.serve import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

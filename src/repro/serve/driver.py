@@ -48,6 +48,14 @@ from repro.core.tre import MTCRuntimeEnv, TickClock
 from repro.core.types import Job
 
 
+class ServeInvariantError(RuntimeError):
+    """A serve-path invariant was violated (over-admission, engine/env
+    slot-count divergence, or an engine asked to admit beyond its free
+    slots). Raised — never ``assert``ed — so zero-over-admission holds
+    under ``python -O`` too; the numbers a serve run reports are only
+    trustworthy because violating them is an error, not a debug check."""
+
+
 @dataclass
 class ServeStats:
     """One serve run's outcome + the invariants it maintained."""
@@ -101,7 +109,10 @@ class EmulatedEngine:
         return max(int(math.ceil(job.runtime / self.tick_s)), 1)
 
     def admit_many(self, jobs: Sequence[Job]) -> None:
-        assert len(jobs) <= len(self.free), "admitted beyond free slots"
+        if len(jobs) > len(self.free):
+            raise ServeInvariantError(
+                "admitted beyond free slots: %d jobs > %d free"
+                % (len(jobs), len(self.free)))
         for job in jobs:
             slot = self.free.pop()
             self._active[slot] = True
@@ -159,10 +170,55 @@ class JaxEngineAdapter:
 
     def admit_many(self, jobs: Sequence[Job]) -> None:
         admitted = self.engine.admit_many([self._request(j) for j in jobs])
-        assert len(admitted) == len(jobs), "admitted beyond free slots"
+        if len(admitted) != len(jobs):
+            raise ServeInvariantError(
+                "admitted beyond free slots: engine took %d of %d"
+                % (len(admitted), len(jobs)))
 
     def step(self) -> list[int]:
         return [req.rid for req in self.engine.step()]
+
+
+def engine_service_ticks(engine, job: Job) -> int:
+    """Decode ticks ``job`` will hold a slot for on ``engine`` — the
+    engine's own notion when it has one (``EmulatedEngine``, or a fleet
+    slice over one), else the token-length mark."""
+    fn = getattr(engine, "service_ticks", None)
+    if fn is not None:
+        return fn(job)
+    return max(job.decode_len, 1)
+
+
+def default_max_ticks(stream, engine, tick_s: float) -> int:
+    """Generous tick budget for a stream: its arrival span plus a fat
+    multiple of its total decode work (a starved run cycles; the bound
+    surfaces the stall as incomplete counts, not a hang). ``stream`` need
+    not be sorted — ``ServeFleet`` passes its tenants' events merged."""
+    span = max((t for t, _ in stream), default=0.0) / tick_s
+    work = sum(engine_service_ticks(engine, j)
+               for _, jobs in stream for j in jobs)
+    return int(span + 8 * work + 36_000)
+
+
+def replay_contention(provider, contention, i: int, now: float,
+                      strict: bool) -> int:
+    """Replay scripted co-tenant load events due at ``now`` (positive
+    delta = request, negative = release) against ``provider``; returns
+    the advanced cursor. Shared by ``ServeDriver`` and ``ServeFleet`` so
+    the strictness and epsilon semantics cannot drift between the two
+    tick bodies."""
+    while i < len(contention) and contention[i][0] <= now + 1e-9:
+        _, tre, delta = contention[i]
+        i += 1
+        if delta > 0:
+            ok = provider.request(tre, delta, now)
+            if not ok and strict:
+                raise ServeInvariantError(
+                    f"scripted contention rejected: {tre} +{delta} "
+                    f"at t={now}")
+        elif delta < 0:
+            provider.release(tre, -delta, now)
+    return i
 
 
 class ServeDriver:
@@ -179,6 +235,13 @@ class ServeDriver:
     contention: ``[(t, tre, delta), ...]`` co-tenant load replayed against
         the provider (positive = request, negative = release) — the "grant
         sequence" a parity test scripts identically into the emulator.
+    clock: share a ``TickClock`` across drivers (``ServeFleet`` runs N
+        tenant drivers on one clock); default: the driver owns its own.
+    phase: control-cycle stagger in ticks — scans fire at
+        ``k % scan_every == phase % scan_every`` (releases likewise), so a
+        fleet spreads its tenants' cycles out instead of colliding at
+        identical instants. The single-tenant default (0) keeps every
+        cycle on the global grid, bit-for-bit with the emulator parity.
     """
 
     def __init__(self, stream: Sequence[tuple[float, list[Job]]], *,
@@ -189,13 +252,14 @@ class ServeDriver:
                  lifecycle: LifecycleService | None = None,
                  tick_s: float = 1.0,
                  contention: Sequence[tuple[float, str, int]] = (),
-                 max_ticks: int | None = None, strict: bool = True):
+                 max_ticks: int | None = None, strict: bool = True,
+                 clock: TickClock | None = None, phase: int = 0):
         self.stream = sorted(stream, key=lambda e: e[0])
         self.provider = provider
         self.engine = engine
         self.tick_s = tick_s
         self.strict = strict
-        self.clock = TickClock()
+        self.clock = clock if clock is not None else TickClock()
         self.stats = ServeStats(name=name, tick_s=tick_s,
                                 workflows_expected=len(self.stream))
         self._admit_buf: list[Job] = []
@@ -204,6 +268,7 @@ class ServeDriver:
         self._stream_i = 0
         self._contention = sorted(contention, key=lambda e: e[0])
         self._cont_i = 0
+        self._phase = phase
         if policy is not None:
             self._scan_every = max(int(round(policy.scan_interval / tick_s)),
                                    1)
@@ -218,19 +283,17 @@ class ServeDriver:
         self.env.grant_listener = self._on_grant
         self.env.track(())            # an empty stream is already all_done
         if max_ticks is None:
-            span = self.stream[-1][0] / tick_s if self.stream else 0.0
-            work = sum(self.engine.service_ticks(j)
-                       if isinstance(self.engine, EmulatedEngine)
-                       else max(j.decode_len, 1)
-                       for _, jobs in self.stream for j in jobs)
-            max_ticks = int(span + 8 * work + 36_000)
+            max_ticks = default_max_ticks(self.stream, engine, tick_s)
         self.max_ticks = max_ticks
 
     # ------------------------------------------------------- env hooks
     def _launch(self, job: Job) -> None:
         # buffered: the tick flushes launches as ONE batched admit, and
         # the task starts decoding next tick — emulator-identical timing
-        assert job.nodes == 1, "1 MTC task = 1 batching slot (= 1 node)"
+        if job.nodes != 1:
+            raise ServeInvariantError(
+                f"1 MTC task = 1 batching slot (= 1 node); "
+                f"got nodes={job.nodes} for {job.name!r}")
         self._admit_buf.append(job)
 
     def _on_grant(self, nodes: int, t: float, deferred: bool) -> None:
@@ -254,25 +317,41 @@ class ServeDriver:
                     self.env.submit(j)
 
     def _replay_contention(self, now: float) -> None:
-        while (self._cont_i < len(self._contention)
-               and self._contention[self._cont_i][0] <= now + 1e-9):
-            t, tre, delta = self._contention[self._cont_i]
-            self._cont_i += 1
-            if delta > 0:
-                ok = self.provider.request(tre, delta, now)
-                assert ok or not self.strict, (tre, delta, now)
-            elif delta < 0:
-                self.provider.release(tre, -delta, now)
+        self._cont_i = replay_contention(self.provider, self._contention,
+                                         self._cont_i, now, self.strict)
+
+    def _maybe_release(self, k: int) -> None:
+        if (self._release_every and k > 0
+                and k % self._release_every == self._phase
+                % self._release_every):
+            self.env.release_check()
+
+    def _process_finishes(self, finished: Sequence[int]) -> None:
+        """Report a step's finished jids to the env (releasing dependents
+        into the queue) and roll up workflow completions."""
+        for jid in finished:
+            task = self.tasks[jid]
+            self.env.finish(task)
+            self.stats.tasks_completed += 1
+            self._wf_left[task.wid] -= 1
+            if self._wf_left[task.wid] == 0:
+                self.stats.workflows_completed += 1
+
+    def _maybe_scan(self, k: int) -> None:
+        if (self._scan_every and k > 0
+                and k % self._scan_every == self._phase % self._scan_every):
+            self.env.scan()
 
     def _flush_admissions(self) -> None:
         if not self._admit_buf:
             return
         if self.engine.active_count + len(self._admit_buf) > self.env.owned:
             self.stats.over_admissions += 1
-            assert not self.strict, (
-                "over-admission: %d active + %d buffered > %d granted"
-                % (self.engine.active_count, len(self._admit_buf),
-                   self.env.owned))
+            if self.strict:
+                raise ServeInvariantError(
+                    "over-admission: %d active + %d buffered > %d granted"
+                    % (self.engine.active_count, len(self._admit_buf),
+                       self.env.owned))
         self.engine.admit_many(self._admit_buf)
         self._admit_buf.clear()
 
@@ -282,9 +361,21 @@ class ServeDriver:
         active = self.engine.active_count
         if active > self.env.owned or self.env.busy > self.env.owned:
             self.stats.over_admissions += 1
-            assert not self.strict, (active, self.env.busy, self.env.owned)
-        assert active == self.env.busy or not self.strict, \
-            (active, self.env.busy)
+            if self.strict:
+                raise ServeInvariantError(
+                    "slots exceed grant: engine %d / env busy %d / owned %d"
+                    % (active, self.env.busy, self.env.owned))
+        if active != self.env.busy and self.strict:
+            raise ServeInvariantError(
+                "engine/env divergence: %d active slots != %d busy nodes"
+                % (active, self.env.busy))
+
+    def _accumulate(self) -> None:
+        self.stats.busy_node_ticks += self.env.busy * self.tick_s
+        self.stats.owned_node_ticks += self.env.owned * self.tick_s
+        self.stats.peak_owned = max(self.stats.peak_owned, self.env.owned)
+        self.stats.queue_peak = max(self.stats.queue_peak,
+                                    len(self.env.queue))
 
     @property
     def _done(self) -> bool:
@@ -292,29 +383,40 @@ class ServeDriver:
                 and not self._admit_buf and self.engine.active_count == 0)
 
     def _tick(self, k: int) -> None:
+        """One control tick — THE serve tick body. ``ServeFleet`` replays
+        these same phases in the same order across N tenant drivers (with
+        one globally-stepped engine between the release and scan phases);
+        keep any phase-order change mirrored there or fleet(N=1) parity
+        breaks."""
         now = self.clock.now()
         self._submit_arrivals(now)
         self._replay_contention(now)
-        if self._release_every and k > 0 and k % self._release_every == 0:
-            self.env.release_check()
-        for jid in self.engine.step():
-            task = self.tasks[jid]
-            self.env.finish(task)
-            self.stats.tasks_completed += 1
-            self._wf_left[task.wid] -= 1
-            if self._wf_left[task.wid] == 0:
-                self.stats.workflows_completed += 1
-        if self._scan_every and k > 0 and k % self._scan_every == 0:
-            self.env.scan()
+        self._maybe_release(k)
+        self._process_finishes(self.engine.step())
+        self._maybe_scan(k)
         self._flush_admissions()
         self._check_invariants()
-        self.stats.busy_node_ticks += self.env.busy * self.tick_s
-        self.stats.owned_node_ticks += self.env.owned * self.tick_s
-        self.stats.peak_owned = max(self.stats.peak_owned, self.env.owned)
-        self.stats.queue_peak = max(self.stats.queue_peak,
-                                    len(self.env.queue))
+        self._accumulate()
 
     # -------------------------------------------------------------- run
+    def finalize(self, ticks: int) -> ServeStats:
+        """Close out the run: derived rates, destroy the TRE (closing
+        every lease) and settle the billed node-hours."""
+        self.stats.ticks = ticks
+        self.stats.makespan_s = self.clock.now()
+        if self.stats.makespan_s > 0:
+            self.stats.workflows_per_hour = (
+                self.stats.workflows_completed
+                / (self.stats.makespan_s / 3600.0))
+        if self.stats.owned_node_ticks > 0:
+            self.stats.slot_utilization = (self.stats.busy_node_ticks
+                                           / self.stats.owned_node_ticks)
+        if not self.env.destroyed:
+            self.env.destroy()
+        self.stats.node_hours = self.provider.node_hours(
+            self.env.name, now=self.clock.now())
+        return self.stats
+
     def run(self) -> ServeStats:
         """Replay the stream to completion (or the tick bound); destroy
         the TRE (closing every lease) and return the stats."""
@@ -324,16 +426,4 @@ class ServeDriver:
             k += 1
             self.clock.advance(self.tick_s)
             self._tick(k)
-        self.stats.ticks = k
-        self.stats.makespan_s = self.clock.now()
-        if self.stats.makespan_s > 0:
-            self.stats.workflows_per_hour = (
-                self.stats.workflows_completed
-                / (self.stats.makespan_s / 3600.0))
-        if self.stats.owned_node_ticks > 0:
-            self.stats.slot_utilization = (self.stats.busy_node_ticks
-                                           / self.stats.owned_node_ticks)
-        self.env.destroy()
-        self.stats.node_hours = self.provider.node_hours(
-            self.env.name, now=self.clock.now())
-        return self.stats
+        return self.finalize(k)

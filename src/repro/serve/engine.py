@@ -43,8 +43,18 @@ class Request:
 
 
 class Engine:
+    """``prefill_chunk``: run every grouped prefill at this fixed batch
+    size (padding the final partial chunk) so the JIT specializes once per
+    *prompt shape* instead of once per (prompt shape, group size) pair —
+    a multi-tenant fleet's admit windows produce many distinct group
+    sizes, and unchunked each would compile its own prefill. ``None``
+    keeps the exact-size behavior (single-tenant streams see few sizes)."""
+
     def __init__(self, lm: LM, params, rt: Runtime, *, max_batch: int,
-                 max_len: int):
+                 max_len: int, prefill_chunk: int | None = None):
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        self.prefill_chunk = prefill_chunk
         self.lm, self.params, self.rt = lm, params, rt
         self.max_batch, self.max_len = max_batch, max_len
         self.caches = lm.init_cache(max_batch, max_len)
@@ -102,11 +112,13 @@ class Engine:
         """Admit requests into free slots (as many as fit, in order).
 
         Admissions are grouped by (prompt length, has-patches) and each
-        group runs ONE batched prefill forward pass; per-slot splices then
+        group runs batched prefill forward passes; per-slot splices then
         scatter the group's caches. Returns the admitted requests — the
-        caller keeps the remainder for the next admit window. Note each
-        distinct (prompt length, group size) pair JIT-specializes the
-        prefill once; keep prompt lengths to a small discrete set.
+        caller keeps the remainder for the next admit window. Without
+        ``prefill_chunk`` each distinct (prompt length, group size) pair
+        JIT-specializes the prefill once — keep prompt lengths to a small
+        discrete set; with it, groups run in fixed-size (padded) chunks,
+        bounding specialization to one per prompt shape.
         """
         # validate the whole batch BEFORE touching any slot: an oversize
         # request mid-batch must not leak already-popped slots
@@ -127,35 +139,53 @@ class Engine:
             groups.setdefault((len(req.tokens), req.patches is not None),
                               []).append((slot, req))
             admitted.append(req)
+        step = self.prefill_chunk
         for (plen, has_patches), members in groups.items():
-            batch = {"tokens": jnp.asarray(
-                np.stack([np.asarray(r.tokens) for _, r in members]))}
-            if has_patches:
-                batch["patches"] = jnp.asarray(
-                    np.stack([np.asarray(r.patches) for _, r in members]))
-            n_img = self.lm.cfg.n_patches if has_patches else 0
-            logits, pre_caches, _ = self._prefill_fn(plen, has_patches)(
-                self.params, batch)
-            toks = np.asarray(jnp.argmax(logits, axis=-1))  # (k,) or (k,ncb)
-            slots = np.array([s for s, _ in members])
-            for i, (slot, req) in enumerate(members):
-                self._splice_caches(slot, jax.tree.map(
-                    lambda a, _i=i: jax.lax.dynamic_slice_in_dim(a, _i, 1,
-                                                                 axis=1),
-                    pre_caches))
-                self.active[slot] = req
-                req.out_tokens.append(toks[i])
-            self.lengths = self.lengths.at[slots].set(plen + n_img)
-            self._last_tok[slots] = toks
-            self._out_buf[slots, 0] = toks
-            self._out_len[slots] = 1
-            self._budget[slots] = [r.max_new_tokens for _, r in members]
-            self._active_mask[slots] = True
-            # call-order seqs (NOT group order): same-step finishes must
-            # come back in admission order across shape groups, matching
-            # EmulatedEngine and the emulator's per-slot event queue
-            self._admit_seq[slots] = [order[s] for s, _ in members]
+            for i0 in range(0, len(members), step or len(members)):
+                part = members[i0:i0 + step] if step else members
+                self._prefill_group(plen, has_patches, part, order,
+                                    pad_to=step)
         return admitted
+
+    def _prefill_group(self, plen: int, has_patches: bool, members,
+                       order: dict[int, int],
+                       pad_to: int | None = None) -> None:
+        """One prefill forward pass for same-shape requests; splice each
+        row's cache into its slot. ``pad_to`` fixes the batch dimension
+        (repeating the last row; padded outputs are discarded) so the
+        compiled prefill is reused across admit windows of any size."""
+        k = len(members)
+        rows = [np.asarray(r.tokens) for _, r in members]
+        if pad_to and k < pad_to:
+            rows.extend([rows[-1]] * (pad_to - k))
+        batch = {"tokens": jnp.asarray(np.stack(rows))}
+        if has_patches:
+            prows = [np.asarray(r.patches) for _, r in members]
+            if pad_to and k < pad_to:
+                prows.extend([prows[-1]] * (pad_to - k))
+            batch["patches"] = jnp.asarray(np.stack(prows))
+        n_img = self.lm.cfg.n_patches if has_patches else 0
+        logits, pre_caches, _ = self._prefill_fn(plen, has_patches)(
+            self.params, batch)
+        toks = np.asarray(jnp.argmax(logits, axis=-1))[:k]  # (k,) or (k,ncb)
+        slots = np.array([s for s, _ in members])
+        for i, (slot, req) in enumerate(members):
+            self._splice_caches(slot, jax.tree.map(
+                lambda a, _i=i: jax.lax.dynamic_slice_in_dim(a, _i, 1,
+                                                             axis=1),
+                pre_caches))
+            self.active[slot] = req
+            req.out_tokens.append(toks[i])
+        self.lengths = self.lengths.at[slots].set(plen + n_img)
+        self._last_tok[slots] = toks
+        self._out_buf[slots, 0] = toks
+        self._out_len[slots] = 1
+        self._budget[slots] = [r.max_new_tokens for _, r in members]
+        self._active_mask[slots] = True
+        # call-order seqs (NOT group order): same-step finishes must
+        # come back in admission order across shape groups, matching
+        # EmulatedEngine and the emulator's per-slot event queue
+        self._admit_seq[slots] = [order[s] for s, _ in members]
 
     # ----------------------------------------------------------- decode
     def step(self) -> list[Request]:

@@ -1,0 +1,508 @@
+"""Multi-tenant serving fleet: N serve TREs partitioning one engine pool.
+
+The paper's economies-of-scale claim is about *consolidating heterogeneous
+workloads on one platform*; ``repro.serve.driver.ServeDriver`` (PR 3)
+serves one MTC tenant. This module is the consolidation step for the
+*serving* path, following PhoenixCloud's coordinated runtime-environment
+provisioning (arXiv:1006.1401) and continuous-batching slot scheduling à
+la Orca/vLLM:
+
+  - **N tenant drivers, one engine pool**: each tenant is a full
+    ``ServeDriver`` lane — its own ``MTCRuntimeEnv`` (trigger monitor,
+    FCFS dispatch, DR1/DR2 negotiation), its own management policy and
+    workflow arrival stream — all replayed on ONE shared ``TickClock``
+    against ONE ``ResourceProvider`` whose capacity **is** the engine
+    pool: 1 batching slot = 1 node, partitioned across tenants by the
+    provider's ``CoordinationPolicy`` (``first-come`` arrival-order vs
+    ``coordinated`` urgency arbitration + water-filling). Deferred grants
+    land between control ticks through each env's ``grant_listener``.
+  - **slot isolation is enforced, not assumed**: ``PartitionedEngine``
+    fronts one backing engine (``EmulatedEngine`` or ``JaxEngineAdapter``)
+    with per-tenant admit accounting — a tenant's admit is checked against
+    *its own* granted slot count at admission AND every tick, so tenant A
+    can never decode in tenant B's granted slots. Violations raise
+    ``ServeInvariantError`` (never ``assert``: the checks survive
+    ``python -O``).
+  - **one decode step per tick, fleet-wide**: all tenants' active slots
+    decode together in a single backing-engine step (continuous batching
+    across the fleet); finished jids are routed back to their owning
+    tenant's env. A tenant whose stream completes is destroyed mid-run,
+    returning its slots to the pool for the others — which is where the
+    consolidated fleet's billed node-hours fall below N dedicated engines.
+
+The fleet's tick replays the SAME phases as ``ServeDriver._tick`` in the
+same order (arrivals -> contention -> release checks -> engine step ->
+scans -> admission flush -> invariants), phase-major across tenants, so a
+``ServeFleet`` of one tenant is bit-identical to a standalone
+``ServeDriver`` on the same stream and grant sequence — the parity
+contract in ``tests/README.md``.
+
+The ``dawningcloud-serve-fleet`` scenario registers in
+``repro.core.registry`` next to the emulated usage models: it carries the
+fleet's policy/capacity defaults (pool sized at the peak hourly-averaged
+offered decode load — the serving analogue of
+``sim.systems.aggregate_hourly_peak``) and serves as the benchmark entry
+point. It is tick-driven, not ``Sim``-driven, so it runs through
+:meth:`ServeFleetSystem.serve` (or ``ServeFleet`` directly), not
+``run_system``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Sequence
+
+from repro.core.policy import MgmtPolicy
+from repro.core.provider import ResourceProvider
+from repro.core.provision import BILL_UNIT_S
+from repro.core.registry import System, register_system
+from repro.core.tre import TickClock
+from repro.core.types import Job
+from repro.serve.driver import (
+    EmulatedEngine, ServeDriver, ServeInvariantError, ServeStats,
+    default_max_ticks, engine_service_ticks, replay_contention,
+)
+
+
+# --------------------------------------------------------------------------
+# slot-partitioned engine front
+# --------------------------------------------------------------------------
+class TenantSlice:
+    """One tenant's view of the shared pool: the 3-method engine adapter
+    contract (``capacity`` / ``active_count`` / ``admit_many`` / ``step``)
+    a ``ServeDriver`` expects, scoped to the tenant's own slots. Admits
+    are accounted against the tenant's granted nodes by the owning
+    ``PartitionedEngine``; ``step()`` drains the finished jids the pool's
+    fleet-wide decode step routed to this tenant."""
+
+    def __init__(self, pool: "PartitionedEngine", tenant: str):
+        self._pool = pool
+        self.tenant = tenant
+        self.capacity = pool.capacity
+
+    @property
+    def active_count(self) -> int:
+        return self._pool.active_of(self.tenant)
+
+    def service_ticks(self, job: Job) -> int:
+        return engine_service_ticks(self._pool.backing, job)
+
+    def admit_many(self, jobs: Sequence[Job]) -> None:
+        self._pool.admit_many(self.tenant, jobs)
+
+    def step(self) -> list[int]:
+        return self._pool.take_finished(self.tenant)
+
+
+class PartitionedEngine:
+    """One backing engine, N tenant partitions. Owns the jid -> tenant
+    routing and the per-tenant slot accounting that makes isolation a
+    checked invariant: an admit beyond the tenant's granted nodes — or
+    beyond the pool — raises ``ServeInvariantError`` (counted instead
+    when ``strict=False``), and :meth:`check_isolation` re-asserts every
+    tenant's ``active <= granted`` plus ``sum(active) <= capacity`` at
+    every fleet tick."""
+
+    def __init__(self, backing, *, strict: bool = True):
+        self.backing = backing
+        self.capacity = backing.capacity
+        self.strict = strict
+        self.isolation_violations = 0
+        self._granted = {}                  # tenant -> () -> granted nodes
+        self._active: dict[str, int] = {}   # tenant -> active slots
+        self._owner: dict[int, str] = {}    # active jid -> tenant
+        self._finished: dict[str, list[int]] = {}
+
+    # ------------------------------------------------------------ wiring
+    def view(self, tenant: str) -> TenantSlice:
+        if tenant in self._active:
+            raise ValueError(f"tenant {tenant!r} already has a slice")
+        self._active[tenant] = 0
+        self._finished[tenant] = []
+        return TenantSlice(self, tenant)
+
+    def bind(self, tenant: str, granted) -> None:
+        """Attach the tenant's granted-slot supplier (its env's live
+        ``owned`` count) — the ceiling its admits are checked against."""
+        self._granted[tenant] = granted
+
+    # ---------------------------------------------------------- accounts
+    def active_of(self, tenant: str) -> int:
+        return self._active[tenant]
+
+    @property
+    def active_total(self) -> int:
+        return sum(self._active.values())
+
+    def granted_of(self, tenant: str) -> int:
+        fn = self._granted.get(tenant)
+        return fn() if fn is not None else self.capacity
+
+    def _violate(self, msg: str) -> None:
+        self.isolation_violations += 1
+        if self.strict:
+            raise ServeInvariantError(msg)
+
+    # ------------------------------------------------------------- admit
+    def admit_many(self, tenant: str, jobs: Sequence[Job]) -> None:
+        if not jobs:
+            return
+        granted = self.granted_of(tenant)
+        if self._active[tenant] + len(jobs) > granted:
+            self._violate(
+                "tenant %r admitting into another tenant's slots: "
+                "%d active + %d admitted > %d granted"
+                % (tenant, self._active[tenant], len(jobs), granted))
+        free = self.capacity - self.backing.active_count
+        if len(jobs) > free:
+            # non-strict (counting) mode must not crash in the backing
+            # engine: count the pool-level violation here and admit only
+            # what fits — the dropped jobs surface as incomplete counts
+            self._violate(
+                "admitting beyond the pool: %d jobs > %d free slots"
+                % (len(jobs), free))
+            jobs = list(jobs)[:free]
+            if not jobs:
+                return
+        for job in jobs:
+            if job.jid in self._owner:
+                raise ValueError(
+                    f"jid {job.jid} already active (owned by "
+                    f"{self._owner[job.jid]!r}); fleet streams need "
+                    f"globally unique jids")
+        self.backing.admit_many(jobs)       # raises beyond pool free slots
+        self._active[tenant] += len(jobs)
+        for job in jobs:
+            self._owner[job.jid] = tenant
+
+    # -------------------------------------------------------------- step
+    def step_all(self) -> None:
+        """ONE decode tick for the whole pool; route finished jids to
+        their owning tenant's buffer (drained by the slices' ``step``)."""
+        for jid in self.backing.step():
+            tenant = self._owner.pop(jid)
+            self._active[tenant] -= 1
+            self._finished[tenant].append(jid)
+
+    def take_finished(self, tenant: str) -> list[int]:
+        out = self._finished[tenant]
+        self._finished[tenant] = []
+        return out
+
+    # -------------------------------------------------------- invariants
+    def check_isolation(self) -> None:
+        """Every tick: no tenant decodes beyond its granted slots, and the
+        partitions together never exceed the pool."""
+        for tenant, active in self._active.items():
+            granted = self.granted_of(tenant)
+            if active > granted:
+                self._violate(
+                    "tenant %r decoding in foreign slots: %d active > "
+                    "%d granted" % (tenant, active, granted))
+        if self.active_total > self.capacity:
+            self._violate(
+                "partitions exceed the pool: %d active > %d slots"
+                % (self.active_total, self.capacity))
+
+
+def rekey_disjoint(tenant_streams):
+    """Clone per-tenant streams onto disjoint jid ranges (deps remapped in
+    step) so independently-generated ``request_stream``s — which each
+    re-key from 0 — can share one ``PartitionedEngine``. Job objects are
+    replaced, not mutated; pass the clones wherever task timings are read
+    back."""
+    out, base = [], 0
+    for stream in tenant_streams:
+        jids = [j.jid for _, jobs in stream for j in jobs]
+        lo = min(jids, default=0)
+        off = base - lo
+        out.append([(t, [replace(j, jid=j.jid + off,
+                                 deps=tuple(d + off for d in j.deps))
+                         for j in jobs]) for t, jobs in stream])
+        base += (max(jids, default=lo) - lo + 1) if jids else 0
+    return out
+
+
+# --------------------------------------------------------------------------
+# the fleet
+# --------------------------------------------------------------------------
+@dataclass
+class FleetStats:
+    """One fleet run: aggregates + the per-tenant ``ServeStats``."""
+    name: str
+    n_tenants: int
+    capacity: int
+    coordination: str
+    ticks: int = 0
+    tick_s: float = 1.0
+    workflows_expected: int = 0
+    workflows_completed: int = 0
+    tasks_completed: int = 0
+    makespan_s: float = 0.0
+    busy_node_ticks: float = 0.0
+    owned_node_ticks: float = 0.0
+    slot_utilization: float = 0.0       # busy / owned integrals (leased)
+    pool_utilization: float = 0.0       # busy integral / (capacity x span)
+    node_hours: float = 0.0             # billed, summed over tenants
+    peak_pool_active: int = 0           # peak fleet-wide busy slots
+    deferred_grants: int = 0
+    deferred_nodes: int = 0
+    over_admissions: int = 0            # summed over tenants (== 0)
+    isolation_violations: int = 0       # PartitionedEngine checks (== 0)
+    tenants: list[dict] = field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class ServeFleet:
+    """N ``ServeDriver`` tenants partitioning one engine pool.
+
+    tenant_streams: one ``request_stream``-style arrival stream per
+        tenant. Jids must be globally unique ACROSS tenants (the shared
+        engine routes finishes by jid): offset each tenant's stream, or
+        build them with disjoint bases as ``benchmarks/serve_fleet.py``
+        does.
+    engine: the backing engine for the whole pool (``EmulatedEngine`` /
+        ``JaxEngineAdapter``); its capacity IS the platform capacity.
+    provider: optional pre-built ``ResourceProvider``; must have
+        ``capacity == engine.capacity`` (1 slot = 1 node). Default: one is
+        built with ``coordination`` / ``quotas`` / ``reservations``.
+    policies: one ``MgmtPolicy`` for every tenant, or a per-tenant list.
+    stagger: spread tenants' scan/release cycles across their intervals
+        (phase ``i * interval / N``) so N tenants' control ticks
+        interleave instead of colliding; a single tenant keeps phase 0,
+        which is what makes ``ServeFleet`` of one tenant bit-identical to
+        ``ServeDriver``.
+    contention: fleet-level co-tenant load replayed against the provider,
+        same format as ``ServeDriver``'s.
+    """
+
+    def __init__(self, tenant_streams: Sequence[Sequence[tuple[float, list[Job]]]],
+                 *, engine, provider: ResourceProvider | None = None,
+                 coordination="first-come",
+                 quotas=None, reservations=None,
+                 policies: MgmtPolicy | Sequence[MgmtPolicy] = None,
+                 names: Sequence[str] | None = None,
+                 tick_s: float = 1.0, stagger: bool = True,
+                 contention: Sequence[tuple[float, str, int]] = (),
+                 scheduler=None, max_ticks: int | None = None,
+                 strict: bool = True, name: str = "serve-fleet"):
+        if not tenant_streams:
+            raise ValueError("a fleet needs at least one tenant stream")
+        n = len(tenant_streams)
+        seen: dict[int, int] = {}
+        for i, stream in enumerate(tenant_streams):
+            for _, jobs in stream:
+                for j in jobs:
+                    if j.jid in seen:
+                        raise ValueError(
+                            f"jid {j.jid} appears in tenant {seen[j.jid]} "
+                            f"and tenant {i}: fleet streams must use "
+                            f"globally unique jids (offset each tenant)")
+                    seen[j.jid] = i
+        if provider is None:
+            provider = ResourceProvider(
+                engine.capacity, coordination=coordination,
+                quotas=quotas, reservations=reservations)
+        if provider.capacity != engine.capacity:
+            raise ValueError(
+                f"provider capacity ({provider.capacity}) must equal the "
+                f"engine pool ({engine.capacity}): 1 batching slot = 1 node")
+        if policies is None:
+            policies = MgmtPolicy.mtc(4, 2.0)
+        if isinstance(policies, MgmtPolicy):
+            policies = [policies] * n
+        if len(policies) != n:
+            raise ValueError("need one policy per tenant")
+        names = list(names) if names is not None else [
+            f"{name}-t{i}" for i in range(n)]
+        self.name = name
+        self.provider = provider
+        self.pool = PartitionedEngine(engine, strict=strict)
+        self.clock = TickClock()
+        self.tick_s = tick_s
+        self.strict = strict
+        self._contention = sorted(contention, key=lambda e: e[0])
+        self._cont_i = 0
+        self.lanes: list[ServeDriver] = []
+        for i, (stream, pol, tname) in enumerate(
+                zip(tenant_streams, policies, names)):
+            every = max(int(round(pol.scan_interval / tick_s)), 1)
+            phase = int(round(i * every / n)) % every if stagger else 0
+            lane = ServeDriver(
+                stream, provider=provider, engine=self.pool.view(tname),
+                policy=pol, name=tname, scheduler=scheduler,
+                tick_s=tick_s, strict=strict, clock=self.clock, phase=phase)
+            self.pool.bind(tname, lambda env=lane.env: env.owned)
+            self.lanes.append(lane)
+        self._live = list(self.lanes)
+        if max_ticks is None:
+            merged = [ev for s in tenant_streams for ev in s]
+            max_ticks = default_max_ticks(merged, engine, tick_s)
+        self.max_ticks = max_ticks
+        self.stats = FleetStats(
+            name=name, n_tenants=n, capacity=engine.capacity,
+            coordination=getattr(provider.policy, "name", "?"),
+            tick_s=tick_s,
+            workflows_expected=sum(len(s) for s in tenant_streams))
+
+    # -------------------------------------------------------------- tick
+    def _replay_contention(self, now: float) -> None:
+        self._cont_i = replay_contention(self.provider, self._contention,
+                                         self._cont_i, now, self.strict)
+
+    def _tick(self, k: int) -> None:
+        """``ServeDriver._tick``'s phases, phase-major across tenants,
+        with ONE fleet-wide decode step between the release and scan
+        phases. Keep the order mirrored with the single-tenant tick body
+        or fleet(N=1) parity breaks."""
+        now = self.clock.now()
+        for lane in self._live:
+            lane._submit_arrivals(now)
+        self._replay_contention(now)
+        for lane in self._live:
+            lane._maybe_release(k)
+        self.pool.step_all()
+        for lane in self._live:
+            lane._process_finishes(lane.engine.step())
+        for lane in self._live:
+            lane._maybe_scan(k)
+        for lane in self._live:
+            lane._flush_admissions()
+        for lane in self._live:
+            lane._check_invariants()
+        self.pool.check_isolation()
+        for lane in self._live:
+            lane._accumulate()
+        self.stats.peak_pool_active = max(self.stats.peak_pool_active,
+                                          self.pool.active_total)
+        # retire completed tenants: the destroy closes their leases and
+        # hands the slots back to the pool for everyone still running —
+        # the consolidation saving a dedicated engine can never realize
+        for lane in [ln for ln in self._live if ln._done]:
+            lane.finalize(k)
+            self._live.remove(lane)
+
+    # --------------------------------------------------------------- run
+    def run(self) -> FleetStats:
+        k = 0
+        self._tick(k)
+        while self._live and k < self.max_ticks:
+            k += 1
+            self.clock.advance(self.tick_s)
+            self._tick(k)
+        # tick-budget cutoff stragglers: withdraw every parked request
+        # BEFORE the finalize loop — one lane's destroy releases its
+        # nodes, and a grant landing in another straggler's queue between
+        # two destroys would open a zero-duration lease billed a whole
+        # hour (same guard as the emulator teardown in sim.systems)
+        now = self.clock.now()
+        for lane in self._live:
+            if not lane.env.destroyed:
+                lane.env.cancel_pending(now, drain=False)
+        for lane in self._live:
+            lane.finalize(k)
+        self._live = []
+        s = self.stats
+        s.ticks = k
+        s.makespan_s = self.clock.now()
+        for lane in self.lanes:
+            ls = lane.stats
+            s.workflows_completed += ls.workflows_completed
+            s.tasks_completed += ls.tasks_completed
+            s.busy_node_ticks += ls.busy_node_ticks
+            s.owned_node_ticks += ls.owned_node_ticks
+            s.node_hours += ls.node_hours
+            s.deferred_grants += ls.deferred_grants
+            s.deferred_nodes += ls.deferred_nodes
+            s.over_admissions += ls.over_admissions
+            s.tenants.append(ls.as_dict())
+        if s.owned_node_ticks > 0:
+            s.slot_utilization = s.busy_node_ticks / s.owned_node_ticks
+        span = max(s.makespan_s, self.tick_s)
+        s.pool_utilization = s.busy_node_ticks / (s.capacity * span)
+        s.isolation_violations = self.pool.isolation_violations
+        return s
+
+
+# --------------------------------------------------------------------------
+# registered scenario
+# --------------------------------------------------------------------------
+def aggregate_decode_peak(tenant_streams, *, tick_s: float = 1.0) -> int:
+    """Peak hourly-averaged offered decode load across the whole fleet, in
+    slots — the serving analogue of ``sim.systems.aggregate_hourly_peak``:
+    the slot count that serves every hour's *arriving* decode work within
+    that hour. Sub-hour bursts queue in the envs instead of being
+    provisioned for, so the pool grows sublinearly in the tenant count
+    while each tenant's dedicated engine must cover its own peak hour."""
+    buckets: dict[int, float] = {}
+    for stream in tenant_streams:
+        for t, jobs in stream:
+            # same service model as EmulatedEngine.service_ticks: token
+            # marks when present, else runtime in ticks — capacity
+            # planning must count the work the engine will actually serve
+            work = sum(j.decode_len if j.decode_len > 0
+                       else max(int(math.ceil(j.runtime / tick_s)), 1)
+                       for j in jobs) * tick_s
+            buckets[int(t // BILL_UNIT_S)] = (
+                buckets.get(int(t // BILL_UNIT_S), 0.0) + work)
+    if not buckets:
+        return 1
+    return max(int(math.ceil(max(buckets.values()) / BILL_UNIT_S)), 1)
+
+
+@register_system("dawningcloud-serve-fleet")
+class ServeFleetSystem(System):
+    """Multi-tenant trace-rate serving (the serve-path counterpart of
+    ``dawningcloud-coordinated``): N serve TREs on one engine pool sized
+    at the peak hourly-averaged offered decode load, slots partitioned by
+    the coordination policy. Tick-driven rather than ``Sim``-driven, so
+    it runs through :meth:`serve`, not ``run_system``."""
+
+    coordination = "coordinated"
+
+    def default_policy(self) -> MgmtPolicy:
+        # MTC serving: small never-released floor, eager growth, 5-minute
+        # release windows (the 3 s scans are the MTC §3.2.2.2 cadence)
+        return MgmtPolicy(initial=4, ratio=2.0, scan_interval=3.0,
+                          release_interval=300.0)
+
+    def default_capacity(self, tenant_streams, policies,
+                         tick_s: float = 1.0) -> int:
+        hourly = aggregate_decode_peak(tenant_streams, tick_s=tick_s)
+        # liveness floor: every tenant's never-released B must coexist
+        # with at least one more slot to drain (1 MTC task = 1 slot)
+        sum_b = sum(p.initial for p in policies)
+        return max(hourly, sum_b + 1)
+
+    def build(self, ctx, workload):
+        raise NotImplementedError(
+            "dawningcloud-serve-fleet is tick-driven (TickClock), not "
+            "Sim-driven: use ServeFleetSystem.serve(tenant_streams, ...) "
+            "or repro.serve.fleet.ServeFleet directly")
+
+    def serve(self, tenant_streams, *, capacity: int | None = None,
+              coordination=None, policies=None, engine=None,
+              **fleet_kw) -> FleetStats:
+        """Build and run a fleet over ``tenant_streams`` with this
+        scenario's defaults (an ``EmulatedEngine`` pool sized by
+        :meth:`default_capacity` unless given)."""
+        n = len(tenant_streams)
+        if policies is None:
+            policies = [self.default_policy()] * n
+        elif isinstance(policies, MgmtPolicy):
+            policies = [policies] * n
+        if engine is None:
+            if capacity is None:
+                capacity = self.default_capacity(
+                    tenant_streams, policies,
+                    tick_s=fleet_kw.get("tick_s", 1.0))
+            engine = EmulatedEngine(capacity,
+                                    tick_s=fleet_kw.get("tick_s", 1.0))
+        fleet = ServeFleet(
+            tenant_streams, engine=engine,
+            coordination=coordination if coordination is not None
+            else self.coordination,
+            policies=list(policies), **fleet_kw)
+        return fleet.run()

@@ -27,7 +27,10 @@ plus the beyond-paper ``dawningcloud-backfill`` / ``dawningcloud-easy``
 through ``repro.core.provider.ResourceProvider`` — shared finite capacity,
 admission queueing, PhoenixCloud-style coordination), and ``run_system`` is
 registry dispatch — a new scenario is a new registered class, not an
-``elif``. All billing goes through ``repro.core.provision`` (1-hour lease
+``elif``. The serving-path counterpart, ``dawningcloud-serve-fleet``
+(N serve TREs partitioning one engine pool on a ``TickClock``), registers
+from ``repro.serve.fleet`` and runs through its ``serve`` entry point
+rather than ``run_system``. All billing goes through ``repro.core.provision`` (1-hour lease
 units); TRE creation/destruction goes through ``repro.core.lifecycle``
 (§3.1.3 state machine).
 """

@@ -8,6 +8,7 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from tests.conftest import given, settings, st
 
@@ -66,10 +67,21 @@ print("OK")
 """
 
 
+@pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="partial-manual shard_map (axis_names subset of the mesh) "
+           "needs the top-level jax.shard_map API; on older jax the "
+           "experimental fallback's auto= path aborts inside XLA's SPMD "
+           "partitioner (IsManualSubgroup check) for this program")
 def test_pod_compressed_grads_match_reference():
     r = subprocess.run([sys.executable, "-c", _SUBPROC],
                        capture_output=True, text=True,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                       cwd="/root/repo", timeout=300)
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            # the stripped env must keep jax on CPU: the
+                            # host-device-count trick is CPU-only, and
+                            # without the pin jax probes for TPU metadata
+                            # for minutes before falling back
+                            "JAX_PLATFORMS": "cpu"},
+                       cwd="/root/repo", timeout=900)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout

@@ -245,6 +245,71 @@ def test_amend_updates_cancels_and_completes():
     assert rb.status == "cancelled" and rb not in prov.admission_queue
 
 
+def test_amend_priority_only_change_redrains():
+    """Regression: a priority-only amend must re-drain. Before the fix,
+    ``changed`` ignored priority, so an urgency bump under coordinated
+    arbitration could not unblock a parked request (e.g. one declined in
+    an earlier drain whose tenant's backlog refilled at the same width)
+    until an unrelated release happened to trigger a drain."""
+    prov = ResourceProvider(50, coordination="coordinated")
+    prov.request("x", 50, 0.0)
+    grants = []
+    backlog = {"empty": True}
+
+    def on_grant(offer, t):               # declines while backlog is empty
+        if backlog["empty"]:
+            return 0
+        grants.append((t, offer))
+        return offer
+
+    req = prov.submit_request("p", 20, 1.0, on_grant=on_grant)
+    assert req.status == "queued"
+    prov.release("x", 30, 2.0)            # drain offers 20 -> declined
+    assert req.status == "queued" and grants == []
+    backlog["empty"] = False              # the tenant's queue refilled,
+    # same width, higher urgency — the scan amends priority only
+    prov.amend(req, 20, 3.0, min_useful=1, priority=4.0)
+    assert req.priority == 4.0
+    assert req.status == "granted" and grants == [(3.0, 20)]
+
+
+def test_amend_same_request_without_priority_does_not_drain():
+    """The no-change fast path survives the priority fix: re-amending an
+    identical (n, min_useful) with priority=None must not drain (the env
+    re-scans every 3 s; a drain per no-op amend would re-offer declined
+    requests every scan)."""
+    prov = ResourceProvider(50)
+    prov.request("x", 50, 0.0)
+    calls = []
+    req = prov.submit_request("p", 20, 1.0,
+                              on_grant=lambda o, t: calls.append(t) or 0)
+    prov.release("x", 30, 2.0)            # declined once (take=0)
+    n_calls = len(calls)
+    prov.amend(req, 20, 3.0, min_useful=1)            # no-op amend
+    assert len(calls) == n_calls          # no fresh drain, no re-offer
+    prov.amend(req, 20, 4.0, min_useful=1, priority=req.priority)
+    assert len(calls) == n_calls          # same priority: still a no-op
+
+
+def test_cancel_with_empty_alloc_curve_falls_back_to_submit_time():
+    """Regression: ``cancel(req, t=None)`` backdate-guarded against
+    ``_alloc_curve[-1]`` and raised IndexError when no allocation event
+    had been recorded; it must fall back to the request's own submission
+    time instead."""
+    prov = ResourceProvider(10)
+    prov.request("x", 10, 0.0)
+    a, b = Tenant(10), Tenant(4)
+    ra = submit(prov, "a", a, 10, 5.0, min_useful=10)
+    rb = submit(prov, "b", b, 4, 6.0, min_useful=4)
+    prov.release("x", 4, 7.0)             # head (10 > 4) still blocks b
+    prov._alloc_curve.clear()             # no allocation event on record
+    prov.cancel(ra)                       # t=None: must not IndexError
+    assert ra.status == "cancelled"
+    # the follower's grant lands at the *cancelled head's* submission
+    # time — the only defensible floor with an empty event log
+    assert rb.status == "granted" and b.grants == [(5.0, 4)]
+
+
 def test_quota_and_reservation_headroom():
     prov = ResourceProvider(100, quotas={"a": 60},
                             reservations={"r": 30})

@@ -410,6 +410,45 @@ def test_admit_many_finishes_in_call_order_across_shape_groups(
     assert [req.rid for req in done] == [0, 1, 2, 3]
 
 
+def test_chunked_prefill_matches_unchunked_and_bounds_jit(musicgen_engine):
+    """``prefill_chunk`` must not change a single greedy token, and must
+    bound JIT specialization to ONE compiled prefill per prompt shape no
+    matter how many distinct admit-group sizes the stream produces (the
+    multi-tenant fleet's prompt-shape-diversity caveat)."""
+    from repro.serve.engine import Engine, Request
+
+    ref = musicgen_engine
+    eng = Engine(ref.lm, ref.params, ref.rt, max_batch=4, max_len=48,
+                 prefill_chunk=2)
+    ncb = eng.lm.cfg.n_codebooks
+
+    def reqs(seed, n=3):
+        r = np.random.default_rng(seed)
+        return [Request(rid=i,
+                        tokens=r.integers(1, eng.lm.cfg.vocab_size,
+                                          (4, ncb)).astype(np.int32),
+                        max_new_tokens=3) for i in range(n)]
+
+    ref_batch = reqs(21)
+    assert len(ref.admit_many(ref_batch)) == 3
+    while ref.active:
+        ref.step()
+    # chunk=2 over 3 same-shape requests: one full chunk + one PADDED
+    # partial chunk — group sizes 2 and 1 share a single compiled prefill
+    batch = reqs(21)
+    assert len(eng.admit_many(batch)) == 3
+    while eng.active:
+        eng.step()
+    for got, want in zip(batch, ref_batch):
+        np.testing.assert_array_equal(np.asarray(got.out_tokens),
+                                      np.asarray(want.out_tokens))
+    assert [r.rid for r in batch] == [0, 1, 2]     # admission order kept
+    assert len(eng._prefill) == 1
+    (prefill_fn,) = eng._prefill.values()
+    assert prefill_fn._cache_size() == 1           # one shape, one trace
+    assert len(eng.free) == 4 and not eng.active
+
+
 def test_admit_many_oversize_raises_without_leaking_slots(musicgen_engine):
     """An oversize request anywhere in the batch must fail the call
     before any slot is consumed (no capacity leak, no half-admits)."""
