@@ -1,8 +1,10 @@
-"""Cross-PR benchmark regression gate.
+"""Cross-PR benchmark regression gate with a rolling trajectory window.
 
-Compares a freshly produced ``BENCH_*.json`` against the committed
-baseline in ``benchmarks/baselines/`` and fails (exit 1) when a key
-metric regresses beyond tolerance.  Metrics are directional:
+Compares a freshly produced ``BENCH_*.json`` against (a) the committed
+baseline in ``benchmarks/baselines/`` and (b) the *median* of the rolling
+last-K history window committed under ``benchmarks/baselines/history/``,
+and fails (exit 1) when a key metric regresses beyond tolerance.
+Metrics are directional:
 
   - ``lower``  is better (billed ratios): fail when
     ``current > baseline * (1 + tol)``
@@ -11,9 +13,18 @@ metric regresses beyond tolerance.  Metrics are directional:
   - ``zero``   is an invariant (over-admissions, isolation violations):
     fail when nonzero, regardless of tolerance
 
+The history window exists because a single committed baseline ratchets:
+each PR may slip a metric by just under the tolerance, and refreshing the
+baseline bakes the slip in — K PRs later the metric has drifted K
+tolerances with every gate green. Gating against the window *median*
+bounds total drift to one tolerance per ~K/2 PRs: a slow leak has to beat
+the majority of recent history, not just its own predecessor.
+
 Baselines are generated with ``--smoke`` (the CI configuration); the
 checker refuses to compare runs whose configs differ, so a smoke run is
-never judged against a full-sweep baseline.
+never judged against a full-sweep baseline. History entries whose config
+differs (an intentional benchmark change) are skipped with a note — the
+window re-fills over the next PRs.
 
 Usage (what CI runs, one line per benchmark)::
 
@@ -21,16 +32,21 @@ Usage (what CI runs, one line per benchmark)::
     python benchmarks/check_regression.py BENCH_scale_curve.json --tol 0.2
 
 To refresh a baseline after an intentional change, rerun the benchmark
-with ``--smoke`` and copy the JSON into ``benchmarks/baselines/``.
+with ``--smoke``, copy the JSON into ``benchmarks/baselines/``, and
+append it to the rolling window with ``--update-history`` (prunes to the
+last K = 5 entries); commit both.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import statistics
 import sys
 from pathlib import Path
 
 BASELINE_DIR = Path(__file__).resolve().parent / "baselines"
+HISTORY_DIR = BASELINE_DIR / "history"
+HISTORY_K = 5
 
 # benchmark name -> (row extractor, row key fields, {metric: direction})
 # The extractor returns a list of comparable rows; rows are matched
@@ -38,7 +54,7 @@ BASELINE_DIR = Path(__file__).resolve().parent / "baselines"
 SPECS: dict[str, dict] = {
     "serve_fleet": {
         "rows": lambda d: d["runs"],
-        "key": ("n_tenants", "policy"),
+        "key": ("n_tenants", "policy", "mix"),
         "metrics": {
             "billed_vs_dedicated": "lower",
             "slots_vs_dedicated": "lower",
@@ -135,6 +151,83 @@ def compare(current: dict, baseline: dict, tol: float) -> list[str]:
     return failures
 
 
+def history_paths(bench_file: str) -> list[Path]:
+    """The committed rolling-window entries for one benchmark artifact,
+    oldest first (entries are ``history/<stem>/NNNN.json``)."""
+    d = HISTORY_DIR / Path(bench_file).stem
+    if not d.is_dir():
+        return []
+    return sorted(d.glob("[0-9]" * 4 + ".json"))
+
+
+def load_history(bench_file: str, current: dict) -> tuple[list[dict], int]:
+    """Config-compatible window entries + the count skipped for config or
+    benchmark-name mismatch (an intentional benchmark change empties the
+    window; it re-fills over the following PRs)."""
+    cfg = _comparable_config(current)
+    entries, skipped = [], 0
+    for p in history_paths(bench_file):
+        entry = json.loads(p.read_text())
+        if (entry.get("benchmark") == current.get("benchmark")
+                and _comparable_config(entry) == cfg):
+            entries.append(entry)
+        else:
+            skipped += 1
+    return entries, skipped
+
+
+def compare_to_history(current: dict, entries: list[dict],
+                       tol: float) -> list[str]:
+    """Gate the current run's directional metrics against the rolling
+    window's per-row *median* (zero-invariants are already absolute in
+    :func:`compare`; rows or metrics absent from the whole window are
+    skipped — nothing to drift from)."""
+    name = current.get("benchmark")
+    spec = SPECS.get(name)
+    if spec is None or not entries:
+        return []
+    window: dict[tuple, dict[str, list[float]]] = {}
+    for entry in entries:
+        for row in spec["rows"](entry):
+            per_metric = window.setdefault(_row_key(row, spec["key"]), {})
+            for metric, direction in spec["metrics"].items():
+                if direction != "zero" and metric in row:
+                    per_metric.setdefault(metric, []).append(row[metric])
+    failures: list[str] = []
+    for row in spec["rows"](current):
+        key = _row_key(row, spec["key"])
+        for metric, values in window.get(key, {}).items():
+            med = statistics.median(values)
+            c = row[metric]
+            direction = spec["metrics"][metric]
+            if direction == "lower" and c > med * (1 + tol):
+                failures.append(
+                    f"{name}{key}: {metric} = {c:.4g} above the "
+                    f"last-{len(values)} window median {med:.4g} "
+                    f"(tolerance {tol:.0%})")
+            elif direction == "higher" and c < med * (1 - tol):
+                failures.append(
+                    f"{name}{key}: {metric} = {c:.4g} below the "
+                    f"last-{len(values)} window median {med:.4g} "
+                    f"(tolerance {tol:.0%})")
+    return failures
+
+
+def update_history(cur_path: Path, k: int = HISTORY_K) -> Path:
+    """Append the current artifact to the rolling window and prune it to
+    the newest ``k`` entries. Entries keep monotonically increasing
+    sequence numbers so pruning never renumbers committed files."""
+    d = HISTORY_DIR / cur_path.stem
+    d.mkdir(parents=True, exist_ok=True)
+    existing = history_paths(cur_path.name)
+    nxt = (int(existing[-1].stem) + 1) if existing else 1
+    dst = d / f"{nxt:04d}.json"
+    dst.write_text(cur_path.read_text())
+    for stale in history_paths(cur_path.name)[:-k]:
+        stale.unlink()
+    return dst
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("current", help="freshly produced BENCH_*.json")
@@ -143,6 +236,12 @@ def main(argv=None) -> int:
                          "<same filename>)")
     ap.add_argument("--tol", type=float, default=0.15,
                     help="relative tolerance for directional metrics")
+    ap.add_argument("--update-history", action="store_true",
+                    help="after a passing check, append this artifact to "
+                         "benchmarks/baselines/history/ and prune to the "
+                         "last K entries (commit the result)")
+    ap.add_argument("--history-k", type=int, default=HISTORY_K,
+                    help="rolling window size kept by --update-history")
     args = ap.parse_args(argv)
 
     cur_path = Path(args.current)
@@ -156,6 +255,8 @@ def main(argv=None) -> int:
     baseline = json.loads(base_path.read_text())
 
     failures = compare(current, baseline, args.tol)
+    entries, skipped = load_history(cur_path.name, current)
+    failures += compare_to_history(current, entries, args.tol)
     if failures:
         print(f"check_regression: {cur_path.name} REGRESSED "
               f"vs {base_path}:", file=sys.stderr)
@@ -164,8 +265,16 @@ def main(argv=None) -> int:
         return 1
     name = current["benchmark"]
     n_rows = len(SPECS[name]["rows"](current))
+    window = (f", window median of {len(entries)}"
+              if entries else ", no history window")
+    note = f" ({skipped} incompatible history entries skipped)" \
+        if skipped else ""
     print(f"check_regression: {cur_path.name} ok "
-          f"({n_rows} rows within {args.tol:.0%} of {base_path})")
+          f"({n_rows} rows within {args.tol:.0%} of {base_path}"
+          f"{window}){note}")
+    if args.update_history:
+        dst = update_history(cur_path, args.history_k)
+        print(f"check_regression: appended to rolling window: {dst}")
     return 0
 
 

@@ -1,48 +1,52 @@
 """Multi-tenant serve-fleet benchmark: the economies-of-scale curve for
 the SERVING path — N tenant streams consolidated on one engine pool vs N
-dedicated engines.
+dedicated engines, for homogeneous AND heterogeneous width mixes.
 
-For each tenant count N and coordination policy (``first-come`` vs
-``coordinated``):
+For each tenant count N, width mix (``--mixes``, e.g. ``1`` = every
+tenant a width-1 small model, ``1/2/4`` = small/medium/large model
+classes cycled across tenants — ``sim.traces.SERVE_PROFILES``) and
+coordination policy (``first-come`` vs ``coordinated``):
 
   - **dedicated baseline**: every tenant gets its own fixed engine sized
     at its own *eager-execution peak* — the slot count that serves every
     workflow with zero queueing delay, the serving analogue of the
     paper's DCS configuration (Montage's "accumulated parallel demand
-    ~166 nodes") — and replays its workflow stream through a standalone
-    ``ServeDriver`` with no negotiation; billed node-hours = its engine
-    held for its whole run.
+    ~166 nodes") — at the tenant's width (a width-w tenant's dedicated
+    engine bills w node units per slot), replayed through a standalone
+    ``ServeDriver`` with no negotiation; billed node-hours = its
+    width-sized engine held for its whole run.
   - **consolidated fleet**: the same N streams on ONE
-    ``PartitionedEngine`` pool sized at the *fleet-wide* peak
-    hourly-averaged offered decode load (statistical multiplexing: the
-    peak of the sum grows sublinearly while the sum of peaks is linear),
-    slots partitioned by the provider's coordination policy, DSP
-    management policies per tenant (elastic grow/release), deferred
-    grants through the admission queue, finished tenants destroyed
-    mid-run so their slots serve the stragglers.
+    ``PartitionedEngine`` pool sized at the *fleet-wide* width-weighted
+    peak hourly-averaged offered decode load (statistical multiplexing:
+    the peak of the sum grows sublinearly while the sum of peaks is
+    linear), node units partitioned by the provider's coordination
+    policy, DSP management policies per tenant (elastic grow/release,
+    B priced at the tenant's width), deferred grants through the
+    admission queue, finished tenants destroyed mid-run so their units
+    serve the stragglers.
 
 Every consolidated cell must complete every workflow with ZERO
-over-admissions and ZERO isolation violations (``strict=True`` raises on
-either at the offending tick — checks that survive ``python -O``), and
-for N >= 3 its per-tenant billed node-hours must come in under the
-dedicated baseline under BOTH policies — asserted, not just reported.
+over-admissions and ZERO weighted-isolation violations (``strict=True``
+raises on either at the offending tick — checks that survive
+``python -O``), and for N >= 3 its per-tenant billed node-hours must
+come in under the dedicated baseline under BOTH policies and EVERY mix —
+asserted, not just reported.
 
 Output: ``BENCH_serve_fleet.json`` (CI uploads it as an artifact and
 ``benchmarks/check_regression.py`` gates it against the committed
-baseline).
+baseline and the rolling history window).
 """
 from __future__ import annotations
 
 import argparse
 import json
-import math
 import time
 
 from repro.core.policy import MgmtPolicy
 from repro.core.provision import ProvisionService
 from repro.serve.driver import EmulatedEngine, ServeDriver
 from repro.serve.fleet import ServeFleet, ServeFleetSystem, rekey_disjoint
-from repro.sim.traces import request_stream, workload_family
+from repro.sim.traces import SERVE_PROFILES, workload_family
 
 
 def _require(cond: bool, msg: str) -> None:
@@ -84,29 +88,59 @@ def eager_peak_slots(stream) -> int:
     return max(peak, 1)
 
 
+def parse_mix(spec: str) -> list[int]:
+    """``"1/2/4"`` -> ``[1, 2, 4]`` (widths cycled across the tenants);
+    every width must name a ``SERVE_PROFILES`` model class."""
+    widths = [int(tok) for tok in spec.replace(",", "/").split("/") if tok]
+    if not widths:
+        raise ValueError(f"empty width mix {spec!r}")
+    unknown = [w for w in widths if w not in SERVE_PROFILES]
+    if unknown:
+        raise ValueError(f"no serve profile for widths {unknown} "
+                         f"(known: {sorted(SERVE_PROFILES)})")
+    return widths
+
+
 def tenant_streams(n_tenants: int, workflows: int, seed: int,
-                   jobs_scale: float, period: float):
+                   jobs_scale: float, period: float,
+                   mix: list[int] | None = None):
     """One workflow arrival stream per tenant (disjoint jid ranges): each
     tenant is its own MTC service provider with its own seeded
-    ``workload_family`` of Montage-shaped mosaics."""
-    streams = []
+    ``workload_family`` of Montage-shaped mosaics, marked by its width
+    class's serve profile (cycled through ``mix``). Returns
+    ``(streams, widths)``."""
+    mix = mix or [1]
+    streams, widths = [], []
     for t in range(n_tenants):
         fam = workload_family(0, workflows, seed=seed * 1009 + t,
                               jobs_scale=jobs_scale)
-        streams.append(request_stream(fam, period=period, seed=seed + t))
-    return rekey_disjoint(streams)
+        profile = SERVE_PROFILES[mix[t % len(mix)]]
+        streams.append(profile.stream(fam, period=period, seed=seed + t))
+        widths.append(profile.width)
+    return rekey_disjoint(streams), widths
 
 
-def run_dedicated(streams, *, policy: MgmtPolicy) -> dict:
-    """N dedicated engines: per-tenant fixed slots, no negotiation."""
+def tenant_policy(base: MgmtPolicy, width: int) -> MgmtPolicy:
+    """The fleet policy priced at the tenant's width (B in node units)."""
+    return MgmtPolicy(initial=base.initial * width, ratio=base.ratio,
+                      scan_interval=base.scan_interval,
+                      release_interval=base.release_interval)
+
+
+def run_dedicated(streams, widths, *, policy: MgmtPolicy) -> dict:
+    """N dedicated engines: per-tenant fixed width-sized slots, no
+    negotiation — a width-w tenant's engine bills w units per slot."""
     t0 = time.perf_counter()
     total = {"node_hours": 0.0, "slots": 0, "workflows": 0, "tasks": 0,
              "over_admissions": 0, "busy": 0.0, "owned": 0.0,
              "makespan_s": 0.0}
-    for i, stream in enumerate(streams):
+    for i, (stream, w) in enumerate(zip(streams, widths)):
+        # slot floor: the consolidated tenant's B is initial * w units ==
+        # `initial` slots at this width, so the floor is width-invariant
         slots = max(eager_peak_slots(stream), policy.initial)
         drv = ServeDriver(stream, provider=ProvisionService(),
-                          engine=EmulatedEngine(slots), fixed_nodes=slots,
+                          engine=EmulatedEngine(slots),
+                          fixed_nodes=slots * w, slot_width=w,
                           name=f"dedicated-t{i}")
         st = drv.run()
         _require(st.workflows_completed == st.workflows_expected,
@@ -115,7 +149,7 @@ def run_dedicated(streams, *, policy: MgmtPolicy) -> dict:
         _require(st.over_admissions == 0,
                  f"dedicated tenant {i} over-admitted {st.over_admissions}")
         total["node_hours"] += st.node_hours
-        total["slots"] += slots
+        total["slots"] += slots * w
         total["workflows"] += st.workflows_completed
         total["tasks"] += st.tasks_completed
         total["busy"] += st.busy_node_ticks
@@ -127,17 +161,19 @@ def run_dedicated(streams, *, policy: MgmtPolicy) -> dict:
     return total
 
 
-def run_consolidated(streams, *, coordination: str,
+def run_consolidated(streams, widths, *, coordination: str,
                      policy: MgmtPolicy) -> dict:
-    """The fleet: one pool sized at the fleet-wide hourly decode peak."""
+    """The fleet: one pool sized at the fleet-wide weighted hourly decode
+    peak."""
     n = len(streams)
-    policies = [policy] * n
+    policies = [tenant_policy(policy, w) for w in widths]
     # size the pool exactly as the registered scenario would: one source
     # of truth for the hourly-peak estimate and the liveness floor
-    capacity = ServeFleetSystem().default_capacity(streams, policies)
+    capacity = ServeFleetSystem().default_capacity(streams, policies,
+                                                   widths=widths)
     fleet = ServeFleet(streams, engine=EmulatedEngine(capacity),
                        coordination=coordination, policies=policies,
-                       name=f"fleet-{coordination}-n{n}")
+                       widths=widths, name=f"fleet-{coordination}-n{n}")
     t0 = time.perf_counter()
     fs = fleet.run()
     wall = time.perf_counter() - t0
@@ -154,14 +190,16 @@ def run_consolidated(streams, *, coordination: str,
     return out
 
 
-def run_cell(streams, *, coordination: str, policy: MgmtPolicy,
-             dedicated: dict) -> dict:
+def run_cell(streams, widths, *, mix: str, coordination: str,
+             policy: MgmtPolicy, dedicated: dict) -> dict:
     n = len(streams)
-    fleet = run_consolidated(streams, coordination=coordination,
+    fleet = run_consolidated(streams, widths, coordination=coordination,
                              policy=policy)
     row = {
         "n_tenants": n,
         "policy": coordination,
+        "mix": mix,
+        "widths": widths,
         "capacity": fleet["capacity"],
         "dedicated_slots": dedicated["slots"],
         "slots_vs_dedicated": fleet["capacity"] / max(dedicated["slots"], 1),
@@ -185,12 +223,13 @@ def run_cell(streams, *, coordination: str, policy: MgmtPolicy,
         "peak_pool_active": fleet["peak_pool_active"],
         "wall_s": fleet["wall_s"],
     }
-    # the acceptance gate: consolidation must pay off at fleet scale
+    # the acceptance gate: consolidation must pay off at fleet scale,
+    # for the heterogeneous mixes exactly as for the homogeneous one
     if n >= 3:
         _require(row["billed_vs_dedicated"] < 1.0,
                  f"consolidated fleet bills "
                  f"{row['billed_vs_dedicated']:.2f}x dedicated at N={n} "
-                 f"under {coordination}")
+                 f"mix={mix} under {coordination}")
     return row
 
 
@@ -202,6 +241,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--jobs-scale", type=float, default=0.05)
     ap.add_argument("--period", type=float, default=3600.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mixes", nargs="+", default=["1", "1/2/4"],
+                    help="width mixes to sweep (cycled across tenants); "
+                         "'1' = the homogeneous PR 4 fleet")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized sweep: fewer tenants, smaller mosaics")
     ap.add_argument("--out", default="BENCH_serve_fleet.json")
@@ -218,19 +260,24 @@ def main(argv=None) -> dict:
     policy = MgmtPolicy(initial=2, ratio=2.0, scan_interval=3.0,
                         release_interval=3600.0)
     runs = []
-    for n in args.tenants:
-        streams = tenant_streams(n, args.workflows, args.seed,
-                                 args.jobs_scale, args.period)
-        dedicated = run_dedicated(streams, policy=policy)
-        for coordination in ("first-come", "coordinated"):
-            runs.append(run_cell(streams, coordination=coordination,
-                                 policy=policy, dedicated=dedicated))
+    for mix_spec in args.mixes:
+        mix = parse_mix(mix_spec)
+        for n in args.tenants:
+            streams, widths = tenant_streams(n, args.workflows, args.seed,
+                                             args.jobs_scale, args.period,
+                                             mix=mix)
+            dedicated = run_dedicated(streams, widths, policy=policy)
+            for coordination in ("first-come", "coordinated"):
+                runs.append(run_cell(streams, widths, mix=mix_spec,
+                                     coordination=coordination,
+                                     policy=policy, dedicated=dedicated))
 
     out = {
         "benchmark": "serve_fleet",
         "config": {"tenants": args.tenants, "workflows": args.workflows,
                    "jobs_scale": args.jobs_scale, "period_s": args.period,
                    "seed": args.seed, "smoke": args.smoke,
+                   "mixes": args.mixes,
                    "policy": {"initial": policy.initial,
                               "ratio": policy.ratio,
                               "release_interval": policy.release_interval}},
@@ -239,13 +286,13 @@ def main(argv=None) -> dict:
     with open(args.out, "w") as fh:
         json.dump(out, fh, indent=2)
 
-    n_tasks = {r["n_tenants"]: r["tasks"] for r in runs}
-    print(f"wrote {args.out} "
-          f"({sum(n_tasks.values())} tasks across {len(runs)} cells)")
-    print(f"{'N':>4s} {'policy':>12s} {'pool':>5s} {'dedic':>6s} "
-          f"{'billed':>8s} {'vs-dedic':>9s} {'util':>6s} {'defer':>6s}")
+    n_tasks = sum(r["tasks"] for r in runs)
+    print(f"wrote {args.out} ({n_tasks} tasks across {len(runs)} cells)")
+    print(f"{'N':>4s} {'mix':>6s} {'policy':>12s} {'pool':>5s} "
+          f"{'dedic':>6s} {'billed':>8s} {'vs-dedic':>9s} {'util':>6s} "
+          f"{'defer':>6s}")
     for r in runs:
-        print(f"{r['n_tenants']:>4d} {r['policy']:>12s} "
+        print(f"{r['n_tenants']:>4d} {r['mix']:>6s} {r['policy']:>12s} "
               f"{r['capacity']:>5d} {r['dedicated_slots']:>6d} "
               f"{r['billed_node_hours']:>8.0f} "
               f"{r['billed_vs_dedicated']:>9.3f} "

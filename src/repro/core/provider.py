@@ -62,6 +62,18 @@ class CoordinationPolicy:
                   ) -> list[tuple[ResourceRequest, int]]:
         raise NotImplementedError
 
+    def direct_claim(self, pending: Sequence[ResourceRequest],
+                     provider: "ResourceProvider", tre: str,
+                     t: float) -> int:
+        """Free capacity a *direct* grant-or-reject request by ``tre``
+        (lifecycle creation, DRP end users, scripted contention) must
+        leave untouched for parked elder requests. The direct path cannot
+        queue, so without this a newcomer's burst silently overtakes
+        every request this policy would have served first — the elder's
+        claim must be charged against the pool before the newcomer is
+        judged against it. 0 = no parked request has a prior claim."""
+        return 0
+
 
 class FirstComePolicy(CoordinationPolicy):
     """Arrival-order service (the paper's §3.2.2.3 semantics): walk the
@@ -101,6 +113,26 @@ class FirstComePolicy(CoordinationPolicy):
                     continue                 # own-quota-capped: skip
                 break                        # shared-pool-blocked: FIFO-fair
         return grants
+
+    def direct_claim(self, pending, provider, tre, t):
+        """FIFO-fair against the direct path too: every parked request is
+        an elder of a direct request arriving now, so its whole remaining
+        shared-pool entitlement is spoken for. A head blocked only by its
+        own quota claims just the room its quota leaves (the fleet is not
+        starved by it — mirroring :meth:`arbitrate`'s skip); the
+        requesting tenant's own parked request never blocks its own
+        direct path (same tenant, nothing is overtaken)."""
+        claim = 0
+        for req in pending:
+            if req.tre == tre:
+                continue
+            need = req.nodes
+            q = provider.quotas.get(req.tre)
+            if q is not None:
+                need = min(need,
+                           max(q - provider.allocated.get(req.tre, 0), 0))
+            claim += need
+        return claim
 
 
 class CoordinatedPolicy(CoordinationPolicy):
@@ -183,6 +215,25 @@ class CoordinatedPolicy(CoordinationPolicy):
                 overlay[req.tre] = overlay.get(req.tre, 0) + offer
         return grants
 
+    def direct_claim(self, pending, provider, tre, t):
+        """Coordinated arbitration re-plans every drain, so younger
+        parked requests hold no hard claim against a direct newcomer —
+        but a *starving* elder's useful floor is already being reserved
+        out of free capacity at every arbitration (pass 0), and a direct
+        grant must honor the same reservation or it drains exactly the
+        capacity accumulating for the elder."""
+        claim = 0
+        for req in pending:
+            if req.tre == tre or t - req.t < self.starvation_s:
+                continue
+            floor = max(req.min_useful, 1)
+            q = provider.quotas.get(req.tre)
+            if q is not None and \
+                    floor > max(q - provider.allocated.get(req.tre, 0), 0):
+                continue                     # own-quota-capped: no claim
+            claim += floor
+        return claim
+
 
 COORDINATION_POLICIES: dict[str, Callable[[], CoordinationPolicy]] = {
     "first-come": FirstComePolicy,
@@ -254,9 +305,28 @@ class ResourceProvider(ProvisionService):
     # ------------------------------------------------------------ actions
     def request(self, tre: str, n: int, t: float, *, count_adjust=True) -> bool:
         """Direct grant-or-reject (lifecycle creation, DRP end users) under
-        the per-tenant quota/reservation policy."""
-        if n > 0 and n > self.headroom(tre):
-            return False
+        the per-tenant quota/reservation policy, ARBITRATION-AWARE: a
+        direct request cannot queue, so it is judged against the headroom
+        left after parked elder requests' prior claims
+        (:meth:`CoordinationPolicy.direct_claim`) — granting against live
+        headroom alone would let a creation or DRP burst overtake a FIFO
+        head (or a starving coordinated elder) that queued first. The
+        tenant's own undrawn reservation stays senior to any parked
+        claim: a guaranteed minimum is exactly the capacity no elder can
+        speak for."""
+        if n > 0:
+            room = self.headroom(tre)
+            if n > room:
+                return False
+            if self.admission_queue:
+                claim = self.policy.direct_claim(
+                    tuple(self.admission_queue), self, tre, t)
+                if claim > 0:
+                    free = self.free_capacity()
+                    own = min(max(self.reservations.get(tre, 0)
+                                  - self.allocated.get(tre, 0), 0), free)
+                    if n > max(room - claim, own):
+                        return False
         return super().request(tre, n, t, count_adjust=count_adjust)
 
     def submit_request(self, tre: str, n: int, t: float, *,

@@ -56,12 +56,26 @@ class ServeInvariantError(RuntimeError):
     trustworthy because violating them is an error, not a debug check."""
 
 
+def decode_budget(decode_len: int, prompt_len: int, max_len: int) -> int:
+    """Token budget a ``max_len``-deep cache can give a request: the
+    ``decode_len`` service mark plus the prefill token, capped to the
+    cache room left after the prompt, floored at 2 (prefill emits token 1
+    at admit, so a budget of R+1 finishes after exactly R decode steps).
+    THE one formula both backends must share: ``JaxEngineAdapter`` sizes
+    ``max_new_tokens`` with it and a cache-aware ``EmulatedEngine`` caps
+    its service ticks to ``decode_budget(...) - 1`` — computing the cap in
+    two places is how the long-decode parity bug happened."""
+    plen = max(prompt_len, 1)
+    return max(min(decode_len + 1, max_len - plen), 2)
+
+
 @dataclass
 class ServeStats:
     """One serve run's outcome + the invariants it maintained."""
     name: str
     ticks: int = 0
     tick_s: float = 1.0
+    slot_width: int = 1                 # node units one batching slot costs
     workflows_expected: int = 0
     workflows_completed: int = 0
     tasks_completed: int = 0
@@ -86,11 +100,19 @@ class EmulatedEngine:
     slot and finishes after its service ticks (``decode_len`` marks, else
     ceil(runtime / tick_s)) — slot accounting vectorized over NumPy arrays
     like the real engine's. Used for trace-scale runs and the parity suite
-    (service ticks == emulator runtime => identical finish times)."""
+    (service ticks == emulator runtime => identical finish times).
 
-    def __init__(self, capacity: int, *, tick_s: float = 1.0):
+    ``max_len`` emulates a real engine's cache depth: with it set, a
+    ``decode_len`` mark is served only up to :func:`decode_budget`'s
+    room — the same cap ``JaxEngineAdapter`` applies — so a trace whose
+    decode marks exceed the cache keeps emulator-vs-jax finish ticks
+    bit-identical. ``None`` (default) serves marks uncapped."""
+
+    def __init__(self, capacity: int, *, tick_s: float = 1.0,
+                 max_len: int | None = None):
         self.capacity = capacity
         self.tick_s = tick_s
+        self.max_len = max_len
         self.free = list(range(capacity))
         self._active = np.zeros((capacity,), bool)
         self._remaining = np.zeros((capacity,), np.int64)
@@ -105,10 +127,15 @@ class EmulatedEngine:
 
     def service_ticks(self, job: Job) -> int:
         if job.decode_len > 0:
+            if self.max_len is not None:
+                # cap to the cache budget exactly as the jax backend does:
+                # budget R+1 tokens = R decode steps in a slot
+                return decode_budget(job.decode_len, job.prompt_len,
+                                     self.max_len) - 1
             return job.decode_len
         return max(int(math.ceil(job.runtime / self.tick_s)), 1)
 
-    def admit_many(self, jobs: Sequence[Job]) -> None:
+    def admit_many(self, jobs: Sequence[Job]) -> Sequence[Job]:
         if len(jobs) > len(self.free):
             raise ServeInvariantError(
                 "admitted beyond free slots: %d jobs > %d free"
@@ -120,6 +147,7 @@ class EmulatedEngine:
             self._rid[slot] = job.jid
             self._admit_seq[slot] = self._seq
             self._seq += 1
+        return jobs
 
     def step(self) -> list[int]:
         """One decode tick for every active slot; returns finished jids in
@@ -151,29 +179,34 @@ class JaxEngineAdapter:
         cfg = engine.lm.cfg
         self._vocab = cfg.vocab_size
         self._ncb = cfg.n_codebooks
-        self._max_len = engine.max_len
+        self.max_len = engine.max_len
         self._rng = np.random.default_rng(seed)
 
     @property
     def active_count(self) -> int:
         return self.engine.active_count
 
+    def service_ticks(self, job: Job) -> int:
+        """Decode steps the engine will actually serve — the cache-capped
+        budget, so a parity harness's ``EmulatedEngine(max_len=...)``
+        agrees with the live backend on every finish tick."""
+        return decode_budget(job.decode_len, job.prompt_len,
+                             self.max_len) - 1
+
     def _request(self, job: Job) -> "Request":
         plen = max(job.prompt_len, 1)
         shape = (plen,) if self._ncb <= 1 else (plen, self._ncb)
         toks = self._rng.integers(1, self._vocab, shape).astype(np.int32)
-        # prefill already emits token 1 at admit, so a budget of R+1
-        # finishes after exactly R decode steps — decode_len marks mean
-        # *service ticks*, the contract EmulatedEngine implements
-        budget = max(min(job.decode_len + 1, self._max_len - plen), 2)
+        budget = decode_budget(job.decode_len, plen, self.max_len)
         return self._Request(rid=job.jid, tokens=toks, max_new_tokens=budget)
 
-    def admit_many(self, jobs: Sequence[Job]) -> None:
+    def admit_many(self, jobs: Sequence[Job]) -> Sequence[Job]:
         admitted = self.engine.admit_many([self._request(j) for j in jobs])
         if len(admitted) != len(jobs):
             raise ServeInvariantError(
                 "admitted beyond free slots: engine took %d of %d"
                 % (len(admitted), len(jobs)))
+        return jobs
 
     def step(self) -> list[int]:
         return [req.rid for req in self.engine.step()]
@@ -242,6 +275,14 @@ class ServeDriver:
         fleet spreads its tenants' cycles out instead of colliding at
         identical instants. The single-tenant default (0) keeps every
         cycle on the global grid, bit-for-bit with the emulator parity.
+    slot_width: node units ONE batching slot of this tenant costs — the
+        heterogeneous-fleet weight (a big-model tenant's slot is w > 1
+        units of the shared pool). Provider grants, ``env.owned``/``busy``
+        and every task's ``nodes`` are denominated in units (each task
+        must carry ``nodes == slot_width``); the engine adapter still
+        counts *slots*, so every engine-vs-grant comparison multiplies by
+        the width. The default (1) is bit-identical to the homogeneous
+        serve path.
     """
 
     def __init__(self, stream: Sequence[tuple[float, list[Job]]], *,
@@ -253,14 +294,19 @@ class ServeDriver:
                  tick_s: float = 1.0,
                  contention: Sequence[tuple[float, str, int]] = (),
                  max_ticks: int | None = None, strict: bool = True,
-                 clock: TickClock | None = None, phase: int = 0):
+                 clock: TickClock | None = None, phase: int = 0,
+                 slot_width: int = 1):
+        if slot_width < 1:
+            raise ValueError(f"slot_width must be >= 1, got {slot_width}")
         self.stream = sorted(stream, key=lambda e: e[0])
         self.provider = provider
         self.engine = engine
+        self.slot_width = slot_width
         self.tick_s = tick_s
         self.strict = strict
         self.clock = clock if clock is not None else TickClock()
         self.stats = ServeStats(name=name, tick_s=tick_s,
+                                slot_width=slot_width,
                                 workflows_expected=len(self.stream))
         self._admit_buf: list[Job] = []
         self.tasks: dict[int, Job] = {}
@@ -276,10 +322,16 @@ class ServeDriver:
                 int(round(policy.release_interval / tick_s)), 1)
         else:
             self._scan_every = self._release_every = 0
+        # the env's node ceiling, in units: a slot-denominated engine of S
+        # slots can serve S * width units; a fleet slice reports the
+        # shared pool's unit capacity directly
+        cap_units = getattr(engine, "capacity_units", None)
+        if cap_units is None:
+            cap_units = engine.capacity * slot_width
         self.env = MTCRuntimeEnv(
             name, provision=provider, clock=self.clock, launch=self._launch,
             policy=policy, fixed_nodes=fixed_nodes, scheduler=scheduler,
-            lifecycle=lifecycle, max_nodes=engine.capacity)
+            lifecycle=lifecycle, max_nodes=cap_units)
         self.env.grant_listener = self._on_grant
         self.env.track(())            # an empty stream is already all_done
         if max_ticks is None:
@@ -290,9 +342,10 @@ class ServeDriver:
     def _launch(self, job: Job) -> None:
         # buffered: the tick flushes launches as ONE batched admit, and
         # the task starts decoding next tick — emulator-identical timing
-        if job.nodes != 1:
+        if job.nodes != self.slot_width:
             raise ServeInvariantError(
-                f"1 MTC task = 1 batching slot (= 1 node); "
+                f"1 MTC task = 1 batching slot (= {self.slot_width} node "
+                f"unit(s) at this tenant's width); "
                 f"got nodes={job.nodes} for {job.name!r}")
         self._admit_buf.append(job)
 
@@ -345,20 +398,39 @@ class ServeDriver:
     def _flush_admissions(self) -> None:
         if not self._admit_buf:
             return
-        if self.engine.active_count + len(self._admit_buf) > self.env.owned:
+        w = self.slot_width
+        if (self.engine.active_count + len(self._admit_buf)) * w \
+                > self.env.owned:
             self.stats.over_admissions += 1
             if self.strict:
                 raise ServeInvariantError(
-                    "over-admission: %d active + %d buffered > %d granted"
+                    "over-admission: (%d active + %d buffered) slots x "
+                    "width %d > %d granted units"
                     % (self.engine.active_count, len(self._admit_buf),
-                       self.env.owned))
-        self.engine.admit_many(self._admit_buf)
-        self._admit_buf.clear()
+                       w, self.env.owned))
+        admitted = self.engine.admit_many(self._admit_buf)
+        if admitted is None or len(admitted) >= len(self._admit_buf):
+            self._admit_buf.clear()
+        else:
+            # a non-strict pool admitted only what fit its free slots: the
+            # remainder stays in the launch buffer and is retried next
+            # tick (its env bookkeeping — busy, allocation — is already
+            # committed, so dropping it would strand the workflow and
+            # spin the run to max_ticks)
+            admitted_ids = {id(j) for j in admitted}
+            self._admit_buf = [j for j in self._admit_buf
+                               if id(j) not in admitted_ids]
 
     def _check_invariants(self) -> None:
         """End-of-tick consistency: the engine serves exactly the env's
-        busy nodes, and nothing exceeds the granted slot count."""
-        active = self.engine.active_count
+        busy node units, and nothing exceeds the granted unit count. The
+        engine counts slots; everything env-side is units, so the
+        comparison weights by the tenant's slot width. A task parked back
+        in the launch buffer by a non-strict partial admit still counts
+        as busy env-side — it has not reached the engine yet, so the
+        buffered units are part of the served total."""
+        active = self.engine.active_count * self.slot_width
+        active += len(self._admit_buf) * self.slot_width
         if active > self.env.owned or self.env.busy > self.env.owned:
             self.stats.over_admissions += 1
             if self.strict:
@@ -367,7 +439,7 @@ class ServeDriver:
                     % (active, self.env.busy, self.env.owned))
         if active != self.env.busy and self.strict:
             raise ServeInvariantError(
-                "engine/env divergence: %d active slots != %d busy nodes"
+                "engine/env divergence: %d active units != %d busy nodes"
                 % (active, self.env.busy))
 
     def _accumulate(self) -> None:

@@ -114,7 +114,12 @@ class Engine:
         Admissions are grouped by (prompt length, has-patches) and each
         group runs batched prefill forward passes; per-slot splices then
         scatter the group's caches. Returns the admitted requests — the
-        caller keeps the remainder for the next admit window. Without
+        caller keeps the remainder for the next admit window. That
+        returned-subset contract is load-bearing: every engine adapter
+        (``EmulatedEngine``, ``JaxEngineAdapter``, the fleet's
+        ``PartitionedEngine``) returns what it admitted so
+        ``ServeDriver._flush_admissions`` can requeue a truncated batch's
+        remainder instead of dropping jobs on the floor. Without
         ``prefill_chunk`` each distinct (prompt length, group size) pair
         JIT-specializes the prefill once — keep prompt lengths to a small
         discrete set; with it, groups run in fixed-size (padded) chunks,

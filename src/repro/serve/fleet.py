@@ -71,14 +71,22 @@ class TenantSlice:
     """One tenant's view of the shared pool: the 3-method engine adapter
     contract (``capacity`` / ``active_count`` / ``admit_many`` / ``step``)
     a ``ServeDriver`` expects, scoped to the tenant's own slots. Admits
-    are accounted against the tenant's granted nodes by the owning
+    are accounted against the tenant's granted node units by the owning
     ``PartitionedEngine``; ``step()`` drains the finished jids the pool's
-    fleet-wide decode step routed to this tenant."""
+    fleet-wide decode step routed to this tenant. ``capacity_units`` is
+    the whole pool in node units — the slot width is carried by the
+    tenant's driver (``ServeDriver.slot_width``), which weights every
+    slots-vs-units comparison."""
 
     def __init__(self, pool: "PartitionedEngine", tenant: str):
         self._pool = pool
         self.tenant = tenant
         self.capacity = pool.capacity
+        self.capacity_units = pool.capacity
+
+    @property
+    def width(self) -> int:
+        return self._pool.width_of(self.tenant)
 
     @property
     def active_count(self) -> int:
@@ -87,37 +95,49 @@ class TenantSlice:
     def service_ticks(self, job: Job) -> int:
         return engine_service_ticks(self._pool.backing, job)
 
-    def admit_many(self, jobs: Sequence[Job]) -> None:
-        self._pool.admit_many(self.tenant, jobs)
+    def admit_many(self, jobs: Sequence[Job]) -> Sequence[Job]:
+        return self._pool.admit_many(self.tenant, jobs)
 
     def step(self) -> list[int]:
         return self._pool.take_finished(self.tenant)
 
 
 class PartitionedEngine:
-    """One backing engine, N tenant partitions. Owns the jid -> tenant
-    routing and the per-tenant slot accounting that makes isolation a
-    checked invariant: an admit beyond the tenant's granted nodes — or
-    beyond the pool — raises ``ServeInvariantError`` (counted instead
-    when ``strict=False``), and :meth:`check_isolation` re-asserts every
-    tenant's ``active <= granted`` plus ``sum(active) <= capacity`` at
-    every fleet tick."""
+    """One backing engine, N tenant partitions with per-tenant slot
+    widths. Owns the jid -> tenant routing and the *weighted* per-tenant
+    accounting that makes isolation a checked invariant: a slot of a
+    width-``w`` tenant costs ``w`` node units of the shared pool, so an
+    admit beyond the tenant's granted units — or beyond the pool's unit
+    capacity — raises ``ServeInvariantError`` (counted instead when
+    ``strict=False``), and :meth:`check_isolation` re-asserts every
+    tenant's ``active_slots * width <= granted`` plus
+    ``sum_i(active_i * width_i) <= capacity`` at every fleet tick. An
+    all-width-1 pool is bit-identical to the unweighted partitioning."""
 
     def __init__(self, backing, *, strict: bool = True):
         self.backing = backing
         self.capacity = backing.capacity
         self.strict = strict
         self.isolation_violations = 0
-        self._granted = {}                  # tenant -> () -> granted nodes
+        self._granted = {}                  # tenant -> () -> granted units
         self._active: dict[str, int] = {}   # tenant -> active slots
+        self._width: dict[str, int] = {}    # tenant -> units per slot
         self._owner: dict[int, str] = {}    # active jid -> tenant
         self._finished: dict[str, list[int]] = {}
+        self._deferred: set[int] = set()    # jids truncated (counted once)
 
     # ------------------------------------------------------------ wiring
-    def view(self, tenant: str) -> TenantSlice:
+    def view(self, tenant: str, width: int = 1) -> TenantSlice:
         if tenant in self._active:
             raise ValueError(f"tenant {tenant!r} already has a slice")
+        if width < 1:
+            raise ValueError(f"slot width must be >= 1, got {width}")
+        if width > self.capacity:
+            raise ValueError(
+                f"tenant {tenant!r} slot width {width} exceeds the pool "
+                f"({self.capacity} units): one slot could never be granted")
         self._active[tenant] = 0
+        self._width[tenant] = int(width)
         self._finished[tenant] = []
         return TenantSlice(self, tenant)
 
@@ -130,9 +150,21 @@ class PartitionedEngine:
     def active_of(self, tenant: str) -> int:
         return self._active[tenant]
 
+    def width_of(self, tenant: str) -> int:
+        return self._width[tenant]
+
+    def units_of(self, tenant: str) -> int:
+        """Node units the tenant's active slots occupy."""
+        return self._active[tenant] * self._width[tenant]
+
     @property
     def active_total(self) -> int:
         return sum(self._active.values())
+
+    @property
+    def active_units(self) -> int:
+        """Weighted occupancy of the whole pool, in node units."""
+        return sum(a * self._width[t] for t, a in self._active.items())
 
     def granted_of(self, tenant: str) -> int:
         fn = self._granted.get(tenant)
@@ -144,26 +176,43 @@ class PartitionedEngine:
             raise ServeInvariantError(msg)
 
     # ------------------------------------------------------------- admit
-    def admit_many(self, tenant: str, jobs: Sequence[Job]) -> None:
+    def admit_many(self, tenant: str, jobs: Sequence[Job]) -> list[Job]:
+        """Admit the tenant's batch; returns the jobs actually admitted.
+        In strict mode that is all of them or a raise; a non-strict pool
+        may truncate to what fits, and the CALLER must requeue the
+        remainder (``ServeDriver._flush_admissions`` keeps it in the
+        launch buffer) — dropping it silently loses workflows."""
         if not jobs:
-            return
+            return []
+        w = self._width[tenant]
         granted = self.granted_of(tenant)
-        if self._active[tenant] + len(jobs) > granted:
+        if (self._active[tenant] + len(jobs)) * w > granted:
             self._violate(
                 "tenant %r admitting into another tenant's slots: "
-                "%d active + %d admitted > %d granted"
-                % (tenant, self._active[tenant], len(jobs), granted))
-        free = self.capacity - self.backing.active_count
-        if len(jobs) > free:
+                "(%d active + %d admitted) slots x width %d > "
+                "%d granted units"
+                % (tenant, self._active[tenant], len(jobs), w, granted))
+        free = self.capacity - self.active_units
+        if len(jobs) * w > free:
             # non-strict (counting) mode must not crash in the backing
             # engine: count the pool-level violation here and admit only
-            # what fits — the dropped jobs surface as incomplete counts
-            self._violate(
-                "admitting beyond the pool: %d jobs > %d free slots"
-                % (len(jobs), free))
-            jobs = list(jobs)[:free]
+            # what fits — the remainder is returned to the caller's
+            # launch buffer, never dropped. The caller retries that
+            # remainder every tick, so a violation is counted only when
+            # the batch contains jobs not already deferred — the counter
+            # measures over-commit events, not backlog duration
+            fit = max(free // w, 0)
+            dropped = list(jobs)[fit:]
+            if self.strict or any(j.jid not in self._deferred
+                                  for j in dropped):
+                self._violate(
+                    "admitting beyond the pool: %d jobs x width %d > "
+                    "%d free units"
+                    % (len(jobs), w, free))
+            self._deferred.update(j.jid for j in dropped)
+            jobs = list(jobs)[:fit]
             if not jobs:
-                return
+                return []
         for job in jobs:
             if job.jid in self._owner:
                 raise ValueError(
@@ -174,6 +223,8 @@ class PartitionedEngine:
         self._active[tenant] += len(jobs)
         for job in jobs:
             self._owner[job.jid] = tenant
+            self._deferred.discard(job.jid)
+        return list(jobs)
 
     # -------------------------------------------------------------- step
     def step_all(self) -> None:
@@ -191,18 +242,22 @@ class PartitionedEngine:
 
     # -------------------------------------------------------- invariants
     def check_isolation(self) -> None:
-        """Every tick: no tenant decodes beyond its granted slots, and the
-        partitions together never exceed the pool."""
+        """Every tick: no tenant decodes beyond its granted node units,
+        and the weighted partitions together never exceed the pool —
+        ``sum_i(active_i * width_i) <= capacity``, the heterogeneous
+        isolation invariant."""
         for tenant, active in self._active.items():
             granted = self.granted_of(tenant)
-            if active > granted:
+            units = active * self._width[tenant]
+            if units > granted:
                 self._violate(
-                    "tenant %r decoding in foreign slots: %d active > "
-                    "%d granted" % (tenant, active, granted))
-        if self.active_total > self.capacity:
+                    "tenant %r decoding in foreign slots: %d active x "
+                    "width %d > %d granted units"
+                    % (tenant, active, self._width[tenant], granted))
+        if self.active_units > self.capacity:
             self._violate(
-                "partitions exceed the pool: %d active > %d slots"
-                % (self.active_total, self.capacity))
+                "partitions exceed the pool: %d active units > %d"
+                % (self.active_units, self.capacity))
 
 
 def rekey_disjoint(tenant_streams):
@@ -245,6 +300,8 @@ class FleetStats:
     pool_utilization: float = 0.0       # busy integral / (capacity x span)
     node_hours: float = 0.0             # billed, summed over tenants
     peak_pool_active: int = 0           # peak fleet-wide busy slots
+    peak_pool_units: int = 0            # peak width-weighted busy units
+    widths: list[int] = field(default_factory=list)  # per-tenant slot width
     deferred_grants: int = 0
     deferred_nodes: int = 0
     over_admissions: int = 0            # summed over tenants (== 0)
@@ -276,6 +333,12 @@ class ServeFleet:
         ``ServeDriver``.
     contention: fleet-level co-tenant load replayed against the provider,
         same format as ``ServeDriver``'s.
+    widths: per-tenant slot widths in node units (the heterogeneous-fleet
+        axis: a big-model tenant's batching slot costs ``w > 1`` units of
+        the shared pool). Every task of tenant ``i`` must carry
+        ``nodes == widths[i]`` — provider grants and env accounting are
+        unit-denominated. Default: all 1 (bit-identical to the
+        homogeneous fleet).
     """
 
     def __init__(self, tenant_streams: Sequence[Sequence[tuple[float, list[Job]]]],
@@ -287,10 +350,14 @@ class ServeFleet:
                  tick_s: float = 1.0, stagger: bool = True,
                  contention: Sequence[tuple[float, str, int]] = (),
                  scheduler=None, max_ticks: int | None = None,
-                 strict: bool = True, name: str = "serve-fleet"):
+                 strict: bool = True, name: str = "serve-fleet",
+                 widths: Sequence[int] | None = None):
         if not tenant_streams:
             raise ValueError("a fleet needs at least one tenant stream")
         n = len(tenant_streams)
+        widths = [1] * n if widths is None else [int(w) for w in widths]
+        if len(widths) != n:
+            raise ValueError("need one slot width per tenant")
         seen: dict[int, int] = {}
         for i, stream in enumerate(tenant_streams):
             for _, jobs in stream:
@@ -301,6 +368,12 @@ class ServeFleet:
                             f"and tenant {i}: fleet streams must use "
                             f"globally unique jids (offset each tenant)")
                     seen[j.jid] = i
+                    if j.nodes != widths[i]:
+                        raise ValueError(
+                            f"tenant {i} task {j.name!r} carries "
+                            f"nodes={j.nodes} but the tenant's slot width "
+                            f"is {widths[i]}: streams must be emitted at "
+                            f"the tenant's width (request_stream(width=))")
         if provider is None:
             provider = ResourceProvider(
                 engine.capacity, coordination=coordination,
@@ -326,14 +399,16 @@ class ServeFleet:
         self._contention = sorted(contention, key=lambda e: e[0])
         self._cont_i = 0
         self.lanes: list[ServeDriver] = []
-        for i, (stream, pol, tname) in enumerate(
-                zip(tenant_streams, policies, names)):
+        for i, (stream, pol, tname, w) in enumerate(
+                zip(tenant_streams, policies, names, widths)):
             every = max(int(round(pol.scan_interval / tick_s)), 1)
             phase = int(round(i * every / n)) % every if stagger else 0
             lane = ServeDriver(
-                stream, provider=provider, engine=self.pool.view(tname),
+                stream, provider=provider,
+                engine=self.pool.view(tname, width=w),
                 policy=pol, name=tname, scheduler=scheduler,
-                tick_s=tick_s, strict=strict, clock=self.clock, phase=phase)
+                tick_s=tick_s, strict=strict, clock=self.clock, phase=phase,
+                slot_width=w)
             self.pool.bind(tname, lambda env=lane.env: env.owned)
             self.lanes.append(lane)
         self._live = list(self.lanes)
@@ -344,7 +419,7 @@ class ServeFleet:
         self.stats = FleetStats(
             name=name, n_tenants=n, capacity=engine.capacity,
             coordination=getattr(provider.policy, "name", "?"),
-            tick_s=tick_s,
+            tick_s=tick_s, widths=list(widths),
             workflows_expected=sum(len(s) for s in tenant_streams))
 
     # -------------------------------------------------------------- tick
@@ -377,6 +452,8 @@ class ServeFleet:
             lane._accumulate()
         self.stats.peak_pool_active = max(self.stats.peak_pool_active,
                                           self.pool.active_total)
+        self.stats.peak_pool_units = max(self.stats.peak_pool_units,
+                                         self.pool.active_units)
         # retire completed tenants: the destroy closes their leases and
         # hands the slots back to the pool for everyone still running —
         # the consolidation saving a dedicated engine can never realize
@@ -431,19 +508,25 @@ class ServeFleet:
 # --------------------------------------------------------------------------
 def aggregate_decode_peak(tenant_streams, *, tick_s: float = 1.0) -> int:
     """Peak hourly-averaged offered decode load across the whole fleet, in
-    slots — the serving analogue of ``sim.systems.aggregate_hourly_peak``:
-    the slot count that serves every hour's *arriving* decode work within
-    that hour. Sub-hour bursts queue in the envs instead of being
-    provisioned for, so the pool grows sublinearly in the tenant count
-    while each tenant's dedicated engine must cover its own peak hour."""
+    node units — the serving analogue of ``sim.systems.
+    aggregate_hourly_peak``: the unit count that serves every hour's
+    *arriving* decode work within that hour. Width-weighted: a task of a
+    width-``w`` tenant (``j.nodes == w``) occupies ``w`` units for its
+    service ticks, so heterogeneous capacity planning charges big-model
+    work at its true pool cost. Sub-hour bursts queue in the envs instead
+    of being provisioned for, so the pool grows sublinearly in the tenant
+    count while each tenant's dedicated engine must cover its own peak
+    hour."""
     buckets: dict[int, float] = {}
     for stream in tenant_streams:
         for t, jobs in stream:
             # same service model as EmulatedEngine.service_ticks: token
             # marks when present, else runtime in ticks — capacity
-            # planning must count the work the engine will actually serve
-            work = sum(j.decode_len if j.decode_len > 0
-                       else max(int(math.ceil(j.runtime / tick_s)), 1)
+            # planning must count the work the engine will actually
+            # serve, weighted by each task's node units
+            work = sum((j.decode_len if j.decode_len > 0
+                        else max(int(math.ceil(j.runtime / tick_s)), 1))
+                       * max(j.nodes, 1)
                        for j in jobs) * tick_s
             buckets[int(t // BILL_UNIT_S)] = (
                 buckets.get(int(t // BILL_UNIT_S), 0.0) + work)
@@ -469,21 +552,24 @@ class ServeFleetSystem(System):
                           release_interval=300.0)
 
     def default_capacity(self, tenant_streams, policies,
-                         tick_s: float = 1.0) -> int:
+                         tick_s: float = 1.0,
+                         widths: Sequence[int] | None = None) -> int:
         hourly = aggregate_decode_peak(tenant_streams, tick_s=tick_s)
         # liveness floor: every tenant's never-released B must coexist
-        # with at least one more slot to drain (1 MTC task = 1 slot)
+        # with at least one more slot of the widest tenant to drain
+        # (1 MTC task = width node units)
         sum_b = sum(p.initial for p in policies)
-        return max(hourly, sum_b + 1)
+        return max(hourly, sum_b + max(widths or (1,)))
 
     def build(self, ctx, workload):
         raise NotImplementedError(
-            "dawningcloud-serve-fleet is tick-driven (TickClock), not "
+            f"{self.name} is tick-driven (TickClock), not "
             "Sim-driven: use ServeFleetSystem.serve(tenant_streams, ...) "
             "or repro.serve.fleet.ServeFleet directly")
 
     def serve(self, tenant_streams, *, capacity: int | None = None,
               coordination=None, policies=None, engine=None,
+              widths: Sequence[int] | None = None,
               **fleet_kw) -> FleetStats:
         """Build and run a fleet over ``tenant_streams`` with this
         scenario's defaults (an ``EmulatedEngine`` pool sized by
@@ -497,12 +583,47 @@ class ServeFleetSystem(System):
             if capacity is None:
                 capacity = self.default_capacity(
                     tenant_streams, policies,
-                    tick_s=fleet_kw.get("tick_s", 1.0))
+                    tick_s=fleet_kw.get("tick_s", 1.0), widths=widths)
             engine = EmulatedEngine(capacity,
                                     tick_s=fleet_kw.get("tick_s", 1.0))
         fleet = ServeFleet(
             tenant_streams, engine=engine,
             coordination=coordination if coordination is not None
             else self.coordination,
-            policies=list(policies), **fleet_kw)
+            policies=list(policies), widths=widths, **fleet_kw)
         return fleet.run()
+
+
+@register_system("dawningcloud-serve-hetero")
+class ServeHeteroFleetSystem(ServeFleetSystem):
+    """Heterogeneous serving fleet: tenants of MIXED slot widths / model
+    sizes consolidated on one weighted pool — the configuration the
+    paper's economies-of-scale argument (§2, §5; arXiv:1004.1276 across
+    communities of different sizes) is actually about. Tenant ``i``
+    defaults to ``width_mix[i % len(width_mix)]`` node units per slot
+    (small / medium / large model classes); grants, isolation and
+    capacity planning are width-weighted throughout, and the billed
+    node-hours come out in the same units as a dedicated width-sized
+    engine's, so the consolidation ratio stays apples-to-apples."""
+
+    width_mix: tuple[int, ...] = (1, 2, 4)
+
+    def tenant_widths(self, n: int) -> list[int]:
+        """Default width assignment: cycle the mix across the tenants."""
+        return [self.width_mix[i % len(self.width_mix)] for i in range(n)]
+
+    def default_policy(self, width: int = 1) -> MgmtPolicy:
+        # the homogeneous scenario's 4-slot floor, priced at this
+        # tenant's width (B and every grant are node units)
+        base = super().default_policy()
+        return replace(base, initial=base.initial * width)
+
+    def serve(self, tenant_streams, *, widths=None, policies=None,
+              **kw) -> FleetStats:
+        n = len(tenant_streams)
+        if widths is None:
+            widths = self.tenant_widths(n)
+        if policies is None:
+            policies = [self.default_policy(w) for w in widths]
+        return super().serve(tenant_streams, widths=widths,
+                             policies=policies, **kw)

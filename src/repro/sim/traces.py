@@ -23,6 +23,7 @@ seed and EXPERIMENTS.md reports our numbers beside the paper's.
 from __future__ import annotations
 
 import zlib
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -307,6 +308,7 @@ def mark_tokens(wl: Workload, *, seconds_per_token: float = 1.0,
 def request_stream(workloads: list[Workload], *, period: float | None = None,
                    seed: int = 0, seconds_per_token: float = 1.0,
                    prompt_lens: tuple[int, ...] = (4, 6, 8),
+                   width: int = 1,
                    ) -> list[tuple[float, list[Job]]]:
     """Merge MTC workloads into one trace-rate workflow arrival stream.
 
@@ -318,7 +320,15 @@ def request_stream(workloads: list[Workload], *, period: float | None = None,
     arrivals are a seeded Poisson process over ``[0, period)`` (default:
     the widest workload window) — the trace timestamps a serving driver
     replays on its tick clock. Sorted by arrival; workflow 0 arrives at
-    t=0 so a stream is never empty-headed."""
+    t=0 so a stream is never empty-headed.
+
+    width: node units one task of this tenant occupies (its model-size
+    class in a heterogeneous fleet): every emitted task carries
+    ``nodes = width`` so unit-denominated provisioning (``ServeDriver.
+    slot_width`` / ``ServeFleet(widths=...)``) bills a big-model slot at
+    its true pool cost. The default (1) keeps the homogeneous marks."""
+    if width < 1:
+        raise ValueError(f"width must be >= 1, got {width}")
     mtc = [wl for wl in workloads if wl.kind == "mtc"]
     if not mtc:
         return []
@@ -337,7 +347,7 @@ def request_stream(workloads: list[Workload], *, period: float | None = None,
         for j in marked.jobs:
             jobs.append(Job(
                 jid=base + j.jid, arrival=float(arrivals[k]),
-                runtime=j.runtime, nodes=j.nodes,
+                runtime=j.runtime, nodes=width,
                 deps=tuple(base + d for d in j.deps), wid=k,
                 name=f"{wl.name}/{j.name}", prompt_len=j.prompt_len,
                 decode_len=j.decode_len))
@@ -345,3 +355,41 @@ def request_stream(workloads: list[Workload], *, period: float | None = None,
         stream.append((float(arrivals[k]), jobs))
     stream.sort(key=lambda e: e[0])
     return stream
+
+
+# --------------------------------------------------------------------------
+# heterogeneous serve profiles (mixed model-size classes in one fleet)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ServeProfile:
+    """One tenant's serving profile in a heterogeneous fleet: the slot
+    width (node units one batching slot of its model class costs) plus
+    the prompt/decode-length scales its requests are marked with. Bigger
+    model classes decode more tokens per trace-second of work
+    (``seconds_per_token < 1`` stretches ``decode_len``) and carry longer
+    prompts — the workload heterogeneity the paper's consolidation
+    argument needs, not just N copies of one tenant."""
+
+    width: int = 1
+    seconds_per_token: float = 1.0
+    prompt_lens: tuple[int, ...] = (4, 6, 8)
+
+    def stream(self, workloads: list[Workload], *,
+               period: float | None = None,
+               seed: int = 0) -> list[tuple[float, list[Job]]]:
+        """:func:`request_stream` with this profile's marks and width."""
+        return request_stream(
+            workloads, period=period, seed=seed,
+            seconds_per_token=self.seconds_per_token,
+            prompt_lens=self.prompt_lens, width=self.width)
+
+
+#: canonical model-size classes, keyed by slot width: small (the PR 4
+#: homogeneous profile, bit-for-bit), medium, large. Wider classes decode
+#: longer outputs from the same trace runtime and prompt with more tokens.
+SERVE_PROFILES: dict[int, ServeProfile] = {
+    1: ServeProfile(width=1, seconds_per_token=1.0, prompt_lens=(4, 6, 8)),
+    2: ServeProfile(width=2, seconds_per_token=0.5, prompt_lens=(6, 8, 12)),
+    4: ServeProfile(width=4, seconds_per_token=0.25,
+                    prompt_lens=(8, 12, 16)),
+}

@@ -390,6 +390,72 @@ def test_starving_elder_reserves_capacity():
     assert young.grants == [(60.0, 10)]
 
 
+def test_direct_request_cannot_overtake_parked_fifo_head():
+    """Satellite regression (fails pre-fix): the direct grant-or-reject
+    path used to check only live headroom, so a lifecycle creation or
+    DRP burst could take the very capacity a FIFO head was parked
+    waiting for — overtaking a request it should queue behind. The
+    direct path must be arbitration-aware: denied while a parked elder
+    of another tenant has a prior claim on the shared pool."""
+    prov = ResourceProvider(100, coordination="first-come")
+    prov.request("x", 90, 0.0)
+    a = Tenant(50)
+    ra = submit(prov, "a", a, 50, 1.0, min_useful=50)   # 10 free: parks
+    prov.release("x", 20, 2.0)            # 30 free < 50: head still blocked
+    assert ra.status == "queued"
+    # pre-fix this succeeded (20 <= 30 live headroom) and starved the head
+    assert not prov.request("drp", 20, 3.0)
+    assert prov.allocated.get("drp", 0) == 0
+    # the head's own tenant overtakes nothing by drawing directly
+    assert prov.request("a", 10, 4.0)
+    prov.release("x", 60, 5.0)            # head finally fits and completes
+    assert ra.status == "granted" and a.grants == [(5.0, 50)]
+    # queue empty again: the direct path reopens
+    assert prov.request("drp", 20, 6.0)
+
+
+def test_direct_request_respects_starving_coordinated_elder():
+    """Coordinated arbitration re-plans every drain, so only a *starving*
+    elder (whose useful floor the arbiter is already reserving out of
+    free capacity) hardens a claim against the direct path — a young
+    parked request does not."""
+    prov = ResourceProvider(
+        100, coordination=CoordinatedPolicy(starvation_s=10.0))
+    prov.request("x", 100, 0.0)
+    wide = Tenant(60)
+    rw = submit(prov, "wide", wide, 60, 0.0, min_useful=60)
+    prov.release("x", 40, 50.0)           # elder (age 50) reserves its 60
+    assert rw.status == "queued"
+    # pre-fix this drained the capacity accumulating for the elder
+    assert not prov.request("drp", 30, 51.0)
+    prov.release("x", 20, 60.0)           # 60 free: elder served
+    assert rw.status == "granted" and wide.grants == [(60.0, 60)]
+    prov.release("x", 10, 61.0)           # queue empty: direct path reopens
+    assert prov.request("drp", 10, 62.0)
+
+    young = ResourceProvider(
+        100, coordination=CoordinatedPolicy(starvation_s=1e9))
+    young.request("x", 100, 0.0)
+    w2 = Tenant(60)
+    submit(young, "wide", w2, 60, 0.0, min_useful=60)
+    young.release("x", 40, 50.0)          # parked, but nowhere near starving
+    assert young.request("drp", 30, 51.0)
+
+
+def test_direct_request_own_reservation_senior_to_parked_claim():
+    """A tenant's guaranteed minimum is exactly the capacity no parked
+    elder can speak for: drawing it directly stays possible while a
+    foreign head is parked on the shared pool."""
+    prov = ResourceProvider(100, coordination="first-come",
+                            reservations={"r": 30})
+    prov.request("x", 70, 0.0)
+    a = Tenant(50)
+    ra = submit(prov, "a", a, 50, 1.0, min_useful=50)
+    assert ra.status == "queued"          # headroom 30 - debt 30 = 0
+    assert prov.request("r", 30, 2.0)     # the reservation is senior
+    assert not prov.request("drp", 1, 3.0)   # everyone else still queues
+
+
 def test_plain_service_rejects_without_queueing():
     prov = ProvisionService(50)
     a = Tenant(40)
@@ -582,6 +648,116 @@ def test_admission_queue_drains_fifo_fair(needs, capacity):
             prov.release("hog", 1, 100.0 + step)
     assert order == sorted(order)
     assert all(r.status == "granted" for r in reqs)
+
+
+# -------------------------------------------------- drain re-entrancy
+def _reentrancy_invariants(prov, reqs, accepted):
+    """The ledger/queue consistency a mid-drain side effect must never
+    break: no double-grant (the provider's ledger matches what each
+    requester actually accepted), no orphaned ``queued`` status (a
+    request is in the admission queue IFF its status says so), and the
+    pool is never oversubscribed."""
+    assert prov.total_allocated <= (prov.capacity or 1 << 31)
+    assert all(v >= 0 for v in prov.allocated.values())
+    in_queue = set(map(id, prov.admission_queue))
+    for req in reqs:
+        assert (req.status == "queued") == (id(req) in in_queue), \
+            (req.tre, req.status)
+        assert req.granted == accepted.get(req.seq, 0), \
+            (req.tre, req.granted, accepted.get(req.seq, 0))
+    per_tre: dict[str, int] = {}
+    for seq, take in accepted.items():
+        req = next(r for r in reqs if r.seq == seq)
+        per_tre[req.tre] = per_tre.get(req.tre, 0) + take
+    for tre, total in per_tre.items():
+        assert prov.allocated.get(tre, 0) == total, (tre,)
+
+
+def _run_reentrant_drain(ops, coordination, capacity=60):
+    """Submit parked requests whose ``on_grant`` callbacks amend / cancel
+    / priority-bump ANOTHER parked request mid-drain, then free capacity
+    in dribs so every drain interleaves with the side effects."""
+    prov = ResourceProvider(capacity, coordination=coordination)
+    prov.request("hog", capacity, 0.0)
+    reqs: list = []
+    accepted: dict[int, int] = {}
+    need_left: dict[int, int] = {}
+
+    def make(slot: int, victim: int, action: str):
+        def on_grant(offer: float, t: float) -> int:
+            req = reqs[slot]
+            take = min(offer, need_left[slot])
+            need_left[slot] -= take
+            if take:
+                accepted[req.seq] = accepted.get(req.seq, 0) + take
+            target = reqs[victim] if victim < len(reqs) else None
+            if target is not None and target is not req \
+                    and target.status == "queued":
+                if action == "amend":
+                    prov.amend(target, max(target.nodes - 1, 1), t,
+                               min_useful=1)
+                elif action == "cancel":
+                    prov.cancel(target, t)
+                elif action == "bump":
+                    prov.amend(target, target.nodes, t,
+                               min_useful=target.min_useful, priority=9.0)
+            return take
+        return on_grant
+
+    t = 1.0
+    for i, (need, victim, action) in enumerate(ops):
+        need_left[i] = need
+        req = prov.submit_request(f"t{i}", need, t,
+                                  on_grant=make(i, victim, action))
+        reqs.append(req)
+        _reentrancy_invariants(prov, reqs, accepted)
+        t += 1.0
+    for step in range(capacity):
+        if prov.allocated.get("hog", 0) == 0:
+            break
+        prov.release("hog", 1, 100.0 + step)
+        _reentrancy_invariants(prov, reqs, accepted)
+    return prov, reqs, accepted
+
+
+@given(st.lists(st.tuples(st.integers(1, 25), st.integers(0, 11),
+                          st.sampled_from(["none", "amend", "cancel",
+                                           "bump"])),
+                min_size=2, max_size=12),
+       st.sampled_from(["first-come", "coordinated"]))
+@settings(max_examples=50, deadline=None)
+def test_property_drain_reentrant_side_effects_keep_ledger_consistent(
+        ops, coordination):
+    """For all interleavings of grants whose callbacks amend, cancel or
+    priority-bump OTHER parked requests mid-drain: no double-grant, no
+    orphaned ``queued`` status, pool never oversubscribed."""
+    prov, reqs, accepted = _run_reentrant_drain(ops, coordination)
+    _reentrancy_invariants(prov, reqs, accepted)
+
+
+def test_drain_reentrant_cancel_and_amend_deterministic():
+    """Shim-proof companion: a grant callback that cancels one victim and
+    bumps/amends others mid-drain leaves the queue consistent. Under
+    first-come the FIFO head is served first, so its cancel fires before
+    the victim ever receives a grant; under coordinated the water-fill
+    may legitimately serve the victim first, so only the consistency
+    invariants are pinned there."""
+    ops = [(10, 1, "cancel"),     # t0's grant cancels t1
+           (20, 2, "amend"),      # t1's grant (never lands) amends t2
+           (30, 0, "bump"),       # t2's grant bumps t0 (already done)
+           (5, 0, "none")]
+    prov, reqs, accepted = _run_reentrant_drain(ops, "first-come")
+    _reentrancy_invariants(prov, reqs, accepted)
+    assert reqs[1].status == "cancelled" and reqs[1].granted == 0
+    assert reqs[1] not in prov.admission_queue
+    assert reqs[0].status == "granted" and reqs[0].granted == 10
+    assert reqs[3].status == "granted"
+    assert prov.allocated.get("t2", 0) == accepted.get(reqs[2].seq, 0)
+
+    prov, reqs, accepted = _run_reentrant_drain(ops, "coordinated")
+    _reentrancy_invariants(prov, reqs, accepted)
+    assert reqs[1].status in ("cancelled", "granted", "queued")
+    assert reqs[1].granted == accepted.get(reqs[1].seq, 0)
 
 
 # ----------------------------------------------------- PolicyEngine DR split

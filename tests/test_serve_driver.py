@@ -21,7 +21,9 @@ from repro.core.policy import MgmtPolicy
 from repro.core.provider import ResourceProvider
 from repro.core.provision import ProvisionService
 from repro.core.types import Job, Workload
-from repro.serve.driver import EmulatedEngine, JaxEngineAdapter, ServeDriver
+from repro.serve.driver import (
+    EmulatedEngine, JaxEngineAdapter, ServeDriver, decode_budget,
+)
 from repro.sim.engine import Sim
 from repro.sim.systems import REServer
 from repro.sim.traces import request_stream, workload_family
@@ -185,6 +187,87 @@ def test_request_stream_skips_htc():
     fam = workload_family(2, 1, seed=0, jobs_scale=0.02)
     stream = request_stream(fam, period=600.0, seed=0)
     assert len(stream) == 1                         # only the MTC workload
+
+
+def test_request_stream_width_denominates_nodes():
+    """A width-w tenant's tasks carry nodes == w (the heterogeneous-fleet
+    unit denomination); width 1 stays the homogeneous marks bit-for-bit."""
+    fam = workload_family(0, 2, seed=0, jobs_scale=0.05)
+    wide = request_stream(fam, period=600.0, seed=0, width=3)
+    assert all(j.nodes == 3 for _, jobs in wide for j in jobs)
+    narrow = request_stream(workload_family(0, 2, seed=0, jobs_scale=0.05),
+                            period=600.0, seed=0, width=1)
+    plain = request_stream(workload_family(0, 2, seed=0, jobs_scale=0.05),
+                           period=600.0, seed=0)
+    key = lambda s: [(t, [(j.jid, j.nodes, j.decode_len, j.prompt_len)
+                          for j in jobs]) for t, jobs in s]
+    assert key(narrow) == key(plain)
+    # widths only re-denominate nodes: jids/marks match the width-1 stream
+    assert ([(j.jid, j.decode_len) for _, jobs in wide for j in jobs]
+            == [(j.jid, j.decode_len) for _, jobs in plain for j in jobs])
+    with pytest.raises(ValueError, match="width"):
+        request_stream(fam, period=600.0, seed=0, width=0)
+
+
+# ------------------------------------------------- decode-budget parity
+def test_emulated_engine_caps_service_to_cache_budget():
+    """Satellite regression (fails pre-fix): ``EmulatedEngine`` used to
+    serve the raw ``decode_len`` mark while ``JaxEngineAdapter`` caps the
+    budget to the cache (``min(decode_len + 1, max_len - plen)``) — a
+    trace with ``decode_len > max_len - plen`` made the two backends
+    disagree on finish ticks, silently voiding the bit-parity contract.
+    A cache-aware emulator must serve exactly ``decode_budget(...) - 1``
+    ticks; the uncapped default keeps the old marks."""
+    capped = EmulatedEngine(4, max_len=48)
+    long_job = Job(jid=0, arrival=0.0, runtime=1.0, nodes=1,
+                   prompt_len=4, decode_len=100)
+    assert capped.service_ticks(long_job) == 43          # 48 - 4 - 1
+    assert capped.service_ticks(long_job) == \
+        decode_budget(100, 4, 48) - 1
+    short = Job(jid=1, arrival=0.0, runtime=1.0, nodes=1,
+                prompt_len=4, decode_len=10)
+    assert capped.service_ticks(short) == 10             # under cap: exact
+    crowded = Job(jid=2, arrival=0.0, runtime=1.0, nodes=1,
+                  prompt_len=47, decode_len=5)
+    assert capped.service_ticks(crowded) == 1            # floor of 1 tick
+    uncapped = EmulatedEngine(4)
+    assert uncapped.service_ticks(long_job) == 100       # default unchanged
+    # the capped emulator admits and finishes on the capped tick
+    capped.admit_many([long_job])
+    ticks = 0
+    while capped.active_count:
+        capped.step()
+        ticks += 1
+    assert ticks == 43
+
+
+def test_serve_driver_wide_slot_tenant():
+    """A width-2 tenant standalone: tasks carry nodes == slot_width, the
+    provider/env account in units, the engine in slots — and the
+    unit-weighted invariants hold end to end."""
+    jobs = [Job(jid=i, arrival=0.0, runtime=3.0, nodes=2, decode_len=3,
+                prompt_len=4, name=f"wide-{i}") for i in range(6)]
+    prov = ResourceProvider(6, coordination="first-come")
+    drv = ServeDriver(
+        [(0.0, jobs)], provider=prov, engine=EmulatedEngine(3),
+        policy=MgmtPolicy(initial=2, ratio=1.0, scan_interval=3.0,
+                          release_interval=60.0),
+        slot_width=2, strict=True)
+    stats = drv.run()
+    assert stats.tasks_completed == 6 and stats.workflows_completed == 1
+    assert stats.over_admissions == 0
+    assert stats.slot_width == 2
+    assert stats.peak_owned <= 6 and stats.peak_owned % 2 == 0
+    # busy integral is unit-denominated: 6 tasks x 3 ticks x 2 units
+    assert stats.busy_node_ticks == 6 * 3 * 2
+    assert prov.total_allocated == 0
+    # a task at the wrong denomination is rejected, not silently admitted
+    bad = Job(jid=99, arrival=0.0, runtime=1.0, nodes=1, decode_len=1)
+    drv2 = ServeDriver([(0.0, [bad])], provider=ProvisionService(),
+                       engine=EmulatedEngine(2), fixed_nodes=4,
+                       slot_width=2)
+    with pytest.raises(Exception, match="batching slot"):
+        drv2.run()
 
 
 # ----------------------------------------- backpressure / driver smoke
@@ -354,6 +437,41 @@ def test_real_engine_serves_workflow_dag(musicgen_engine):
     for j in drv.env.completed:
         for d in j.deps:
             assert pos[d] < pos[j.jid]
+
+
+def test_long_decode_parity_emulator_matches_jax(musicgen_engine):
+    """Satellite regression (fails pre-fix): a trace whose ``decode_len``
+    exceeds the cache room (``max_len - plen``) must produce IDENTICAL
+    task start/finish ticks on the emulated and jax backends — the jax
+    adapter caps the decode budget to the cache, so a cache-aware
+    ``EmulatedEngine(max_len=...)`` must cap the same way. Pre-fix the
+    emulator served the raw 60/50-tick marks while the engine finished
+    at the cap, silently voiding the bit-parity contract."""
+    def long_jobs():
+        return [Job(jid=0, arrival=0.0, runtime=1.0, nodes=1, wid=0,
+                    prompt_len=4, decode_len=60, name="long-root"),
+                Job(jid=1, arrival=0.0, runtime=1.0, nodes=1, wid=0,
+                    deps=(0,), prompt_len=6, decode_len=50, name="long-mid"),
+                Job(jid=2, arrival=0.0, runtime=1.0, nodes=1, wid=0,
+                    deps=(1,), prompt_len=4, decode_len=7, name="short")]
+
+    assert 60 > musicgen_engine.max_len - 4     # the cap really binds
+
+    def run(engine):
+        jobs = long_jobs()
+        drv = ServeDriver([(0.0, jobs)], provider=ProvisionService(),
+                          engine=engine, fixed_nodes=4)
+        stats = drv.run()
+        assert stats.tasks_completed == 3 and stats.over_admissions == 0
+        return {j.name: (j.start, j.finish) for j in jobs}
+
+    jax_times = run(JaxEngineAdapter(musicgen_engine, seed=0))
+    emu_times = run(EmulatedEngine(4, max_len=musicgen_engine.max_len))
+    assert jax_times == emu_times
+    # and the capped tick counts are the budget formula's, not the marks
+    cap = musicgen_engine.max_len
+    assert (emu_times["long-root"][1] - emu_times["long-root"][0]
+            == decode_budget(60, 4, cap) - 1)
 
 
 def test_batched_admit_matches_single_admit(musicgen_engine):
