@@ -27,10 +27,10 @@ BENCHES = {
 def main() -> None:
     names = sys.argv[1:] or list(BENCHES)
     for name in names:
-        t0 = time.time()
+        t0 = time.perf_counter()
         print(f"\n{'=' * 72}\n# benchmark: {name}\n{'=' * 72}")
         BENCHES[name]()
-        print(f"[{name}: {time.time() - t0:.1f}s]")
+        print(f"[{name}: {time.perf_counter() - t0:.1f}s]")
 
 
 if __name__ == "__main__":

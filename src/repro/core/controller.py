@@ -128,7 +128,12 @@ class ElasticController:
     def _mesh_for(self, n: int):
         if n <= 1:
             return None
-        assert n <= len(self.devices), (n, len(self.devices))
+        # guarded raise, not assert: a mesh wider than the device pool
+        # must fail loudly (under ``python -O`` jax would raise a shape
+        # error much later, far from the sizing bug)
+        if n > len(self.devices):
+            raise RuntimeError(
+                f"mesh wider than device pool: {n} > {len(self.devices)}")
         from jax.sharding import Mesh
         from repro.parallel.sharding import AXIS_DATA
         return Mesh(np.array(self.devices[:n]), (AXIS_DATA,))

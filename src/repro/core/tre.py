@@ -189,8 +189,12 @@ class RuntimeEnv:
         else:
             self._expected = (self._expected or 0) + len(jobs)
             for j in jobs:
-                assert j.jid not in self._ndeps, \
-                    f"duplicate jid {j.jid} in extended track"
+                # guarded raise, not assert: a duplicate jid silently
+                # corrupts the dependency counts under ``python -O`` and
+                # the workflow never completes (or completes twice)
+                if j.jid in self._ndeps:
+                    raise RuntimeError(
+                        f"duplicate jid {j.jid} in extended track")
                 self._ndeps[j.jid] = len(j.deps)
         for j in jobs:
             for d in j.deps:
@@ -355,7 +359,12 @@ class RuntimeEnv:
     def grow(self, task: Any, extra: int) -> None:
         """Beyond-paper: a live driver widens a *running* task into spare
         nodes (e.g. data-parallel mesh growth). Keeps busy/idle exact."""
-        assert extra <= self.free, (extra, self.free)
+        # guarded raise, not assert: growing past the free pool would
+        # silently oversubscribe busy vs owned under ``python -O``
+        if extra > self.free:
+            raise RuntimeError(
+                f"grow exceeds free nodes: {extra} > {self.free} "
+                f"on {self.name!r}")
         self._account_idle()
         self.busy += extra
         self._alloc[id(task)] = self._alloc.get(id(task), task.nodes) + extra
@@ -363,8 +372,13 @@ class RuntimeEnv:
 
     def shrink(self, task: Any, n: int) -> None:
         """Inverse of :meth:`grow`: return ``n`` of the task's nodes."""
-        assert n <= self._alloc.get(id(task), task.nodes), \
-            (n, self._alloc.get(id(task)))
+        held = self._alloc.get(id(task), task.nodes)
+        # guarded raise, not assert: shrinking below the allocation would
+        # drive busy negative and break idle accounting under ``python -O``
+        if n > held:
+            raise RuntimeError(
+                f"shrink exceeds task allocation: {n} > {held} "
+                f"on {self.name!r}")
         self._account_idle()
         self.busy -= n
         self._alloc[id(task)] -= n

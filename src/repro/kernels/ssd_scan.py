@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.parallel.compat import tpu_compiler_params
+
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_scr,
                 *, chunk: int):
@@ -99,7 +101,8 @@ def ssd_scan(x, dt, A, Bg, Cg, *, chunk: int = 128, interpret: bool = False):
             jax.ShapeDtypeStruct((B, nh, hp, ds), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((hp, ds), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
+            pltpu,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt.astype(jnp.float32), A.astype(jnp.float32), Bg, Cg)

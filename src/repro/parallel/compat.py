@@ -20,6 +20,15 @@ else:
         return jax.lax.psum(1, axis_name)
 
 
+def tpu_compiler_params(pltpu, **kw):
+    """``pltpu.CompilerParams`` was ``TPUCompilerParams`` before the
+    pallas TPU params class dropped its prefix; the kernels are written
+    against the current name and adapted here."""
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kw)
+
+
 if hasattr(jax, "shard_map"):
     shard_map = jax.shard_map
 else:

@@ -26,7 +26,12 @@ class Sim:
         return not self._heap
 
     def at(self, t: float, fn: Callable, *args) -> None:
-        assert t >= self.t - 1e-9, (t, self.t)
+        # guarded raise, not assert: an event scheduled in the past would
+        # silently fire out of order under ``python -O`` and desequence
+        # the whole run (billing/idle integrals depend on event order)
+        if t < self.t - 1e-9:
+            raise RuntimeError(
+                f"event scheduled in the past: t={t} < now={self.t}")
         heapq.heappush(self._heap, (t, self._seq, fn, args))
         self._seq += 1
 

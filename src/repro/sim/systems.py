@@ -82,7 +82,11 @@ class REServer:
                  hold_until: float = 0.0,
                  lifecycle: LifecycleService | None = None, scheduler=None,
                  phase: float = 0.0):
-        assert mode in ("fixed", "dsp")
+        # guarded raise, not assert: a typo'd mode would silently run a
+        # fixed env with dsp billing under ``python -O``
+        if mode not in ("fixed", "dsp"):
+            raise ValueError(
+                f"unknown TRE mode {mode!r} (expected 'fixed' or 'dsp')")
         self.sim = sim
         self.wl = workload
         self.name = workload.name

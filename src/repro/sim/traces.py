@@ -168,6 +168,17 @@ def sdsc_blue_like(seed: int = 1, *, nodes: int = 144, n_jobs: int = 2649,
 # --------------------------------------------------------------------------
 # MTC workflow (Montage-like DAG)
 # --------------------------------------------------------------------------
+def _check_montage_graph(n_jobs: int, n_project: int) -> None:
+    """Guarded raise, not assert: the stage widths below are wired to
+    ``n_project`` in four places; a drifted edit would silently ship a
+    miscounted mosaic under ``python -O`` and every trace-scale stream
+    built from it would replay the wrong workflow."""
+    if n_jobs != 6 * n_project + 4:
+        raise RuntimeError(
+            f"montage graph inconsistent: {n_jobs} jobs != "
+            f"6*{n_project}+4 for the 9-stage mosaic")
+
+
 def montage_like(seed: int = 2, *, n_project: int = 166,
                  mean_runtime: float = 11.38) -> Workload:
     """Montage mosaic workflow: 1,000 tasks in 9 stages.
@@ -210,7 +221,7 @@ def montage_like(seed: int = 2, *, n_project: int = 166,
     mean_now = float(np.mean([j.runtime for j in jobs]))
     for j in jobs:
         j.runtime *= mean_runtime / mean_now
-    assert len(jobs) == 6 * n_project + 4, len(jobs)
+    _check_montage_graph(len(jobs), n_project)
     # the configured width scales with the mosaic (166 at the paper's size)
     wl = Workload("montage", "mtc", jobs, trace_nodes=n_project, period=3600.0)
     return wl

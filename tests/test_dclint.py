@@ -1,0 +1,415 @@
+"""Fixture self-tests for ``tools/dclint`` (the DSP contract linter).
+
+Per rule: one must-flag snippet (the bug class the rule exists for) and
+one must-not-flag snippet (the sanctioned fix pattern) — so a rule edit
+that goes blind OR noisy fails here. Plus the infrastructure contracts:
+pragma suppression, baseline burn-down (stale entries prune, new
+violations fail), the JSON output schema, and the eval_shape kernel
+contract harness.
+
+tests/README.md maps each rule to the dynamic property test it
+complements.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.dclint import Violation, lint_file  # noqa: E402
+from tools.dclint import baseline as baseline_mod  # noqa: E402
+from tools.dclint.__main__ import main as dclint_main  # noqa: E402
+
+
+def run_on(tmp_path: Path, rel: str, code: str) -> list[Violation]:
+    """Write a fixture at a scope-relevant relative path and lint it."""
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(code), encoding="utf-8")
+    return lint_file(path, root=tmp_path)
+
+
+def codes(violations: list[Violation]) -> list[str]:
+    return [v.code for v in violations]
+
+
+# =====================================================================
+# DC101 — invariant asserts
+# =====================================================================
+def test_dc101_flags_bare_assert(tmp_path):
+    vs = run_on(tmp_path, "src/repro/core/x.py", """\
+        def grow(self, extra):
+            assert extra <= self.free, (extra, self.free)
+            self.busy += extra
+        """)
+    assert codes(vs) == ["DC101"]
+    assert "python -O" in vs[0].message
+
+
+def test_dc101_passes_guarded_raise(tmp_path):
+    vs = run_on(tmp_path, "src/repro/core/x.py", """\
+        def grow(self, extra):
+            if extra > self.free:
+                raise RuntimeError(f"grow exceeds free: {extra}")
+            self.busy += extra
+        """)
+    assert vs == []
+
+
+def test_dc101_out_of_scope_not_flagged(tmp_path):
+    # kernels/ arg validation is not control-plane invariant scope
+    vs = run_on(tmp_path, "src/repro/kernels/x.py",
+                "def f(n):\n    assert n > 0\n")
+    assert "DC101" not in codes(vs)
+
+
+# =====================================================================
+# DC201 — determinism
+# =====================================================================
+def test_dc201_flags_wall_clock_and_global_rng(tmp_path):
+    vs = run_on(tmp_path, "src/repro/sim/x.py", """\
+        import time, random
+        import numpy as np
+
+        def jitter():
+            t = time.time()
+            np.random.seed(0)
+            return t + random.random() + np.random.rand()
+        """)
+    assert codes(vs) == ["DC201"] * 4
+
+
+def test_dc201_passes_seeded_rng_and_perf_counter(tmp_path):
+    vs = run_on(tmp_path, "benchmarks/bench_x.py", """\
+        import time
+        import numpy as np
+
+        def measure(seed):
+            rng = np.random.default_rng(seed)
+            r2 = __import__("random").Random(seed)
+            t0 = time.perf_counter()
+            return rng.normal(), r2.random(), time.perf_counter() - t0
+        """)
+    assert vs == []
+
+
+def test_dc201_launch_is_exempt(tmp_path):
+    vs = run_on(tmp_path, "src/repro/launch/x.py",
+                "import time\nSTAMP = time.time()\n")
+    assert vs == []
+
+
+# =====================================================================
+# DC301 — drain re-entrancy
+# =====================================================================
+_DC301_BUG = """\
+    class Env:
+        def scan(self):
+            self.provision.submit_request(
+                "a", 4, 0.0, on_grant=self._apply_grant)
+
+        def _apply_grant(self, offer, t):
+            self._commit(offer)
+            return offer
+
+        def _commit(self, n):
+            self.provision.release(self.name, n, 0.0)
+            self.provider.allocated["x"] -= n
+    """
+
+_DC301_OK = """\
+    class Env:
+        def scan(self):
+            self.provision.submit_request(
+                "a", 4, 0.0, on_grant=self._apply_grant)
+            self.provision.release(self.name, 1, 0.0)   # outside callback
+
+        def _apply_grant(self, offer, t):
+            take = min(offer, self.need)
+            self.engine.granted(take)     # own bookkeeping only
+            self.owned += take
+            self.schedule()
+            return take
+
+        def schedule(self):
+            pass
+    """
+
+
+def test_dc301_flags_ledger_reentry_transitively(tmp_path):
+    vs = run_on(tmp_path, "src/repro/core/cb.py", _DC301_BUG)
+    assert codes(vs) == ["DC301", "DC301"]
+    assert "mid-drain" in vs[0].message
+    assert "_apply_grant -> _commit" in vs[0].message       # call path
+    assert "allocated" in vs[1].message                     # ledger write
+
+
+def test_dc301_passes_own_bookkeeping_callback(tmp_path):
+    vs = run_on(tmp_path, "src/repro/core/cb.py", _DC301_OK)
+    assert vs == []
+
+
+def test_dc301_grant_listener_assignment_is_a_root(tmp_path):
+    vs = run_on(tmp_path, "src/repro/serve/gl.py", """\
+        class Driver:
+            def __init__(self, env):
+                env.grant_listener = self._on_grant
+
+            def _on_grant(self, nodes, t, deferred):
+                self.provision.amend(self.req, nodes, t)
+        """)
+    assert codes(vs) == ["DC301"]
+
+
+# =====================================================================
+# DC401 — slot/unit discipline
+# =====================================================================
+def test_dc401_flags_unweighted_slot_unit_compare(tmp_path):
+    vs = run_on(tmp_path, "src/repro/serve/x.py", """\
+        class D:
+            def check(self):
+                if self.engine.active_count > self.env.owned:
+                    raise RuntimeError
+                return self.active_slots + self.granted
+        """)
+    assert codes(vs) == ["DC401", "DC401"]
+    assert "width conversion" in vs[0].message
+
+
+def test_dc401_passes_width_weighted_comparison(tmp_path):
+    vs = run_on(tmp_path, "src/repro/serve/x.py", """\
+        class D:
+            def check(self):
+                active = self.engine.active_count * self.slot_width
+                active += len(self.buf) * self.slot_width
+                if active > self.env.owned:
+                    raise RuntimeError
+                slots = self.env.owned // self.slot_width
+                return slots + self.engine.active_count
+        """)
+    assert vs == []
+
+
+def test_dc401_only_serve_scope(tmp_path):
+    vs = run_on(tmp_path, "src/repro/core/x.py",
+                "def f(active_count, owned):\n"
+                "    return active_count > owned\n")
+    assert "DC401" not in codes(vs)
+
+
+# =====================================================================
+# DC501 — tracer safety
+# =====================================================================
+def test_dc501_flags_tracer_hazards(tmp_path):
+    vs = run_on(tmp_path, "src/repro/kernels/k.py", """\
+        import functools
+        from jax.experimental import pallas as pl
+
+        def _kern(x_ref, o_ref, *, block: int):
+            i = pl.program_id(0)
+            if i == 0:
+                o_ref[...] = x_ref[...]
+
+        def run(x, lengths, buf=[]):
+            return pl.pallas_call(
+                functools.partial(_kern, block=4),
+                in_specs=[pl.BlockSpec((lengths[0], 128),
+                                       lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+            )(x)
+        """)
+    got = codes(vs)
+    assert got.count("DC501") == 3 and set(got) == {"DC501"}
+    msgs = " | ".join(v.message for v in vs)
+    assert "pl.when" in msgs                 # python-if on traced value
+    assert "statically resolvable" in msgs   # BlockSpec shape entry
+    assert "mutable default" in msgs
+
+
+def test_dc501_passes_tracer_safe_kernel(tmp_path):
+    vs = run_on(tmp_path, "src/repro/kernels/k.py", """\
+        import functools
+        from jax.experimental import pallas as pl
+
+        def _kern(x_ref, o_ref, *, block: int):
+            i = pl.program_id(0)
+
+            @pl.when(i == 0)
+            def _init():
+                o_ref[...] = x_ref[...]
+
+            if block > 4:      # static kwarg bound via partial: fine
+                pass
+
+        def run(x, buf=None):
+            bq = min(128, x.shape[0])
+            return pl.pallas_call(
+                functools.partial(_kern, block=4),
+                in_specs=[pl.BlockSpec((bq, x.shape[1]),
+                                       lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((bq, 128), lambda i: (i, 0)),
+            )(x)
+        """)
+    assert vs == []
+
+
+# =====================================================================
+# pragma suppression
+# =====================================================================
+def test_line_pragma_suppresses_named_code_only(tmp_path):
+    vs = run_on(tmp_path, "src/repro/sim/x.py", """\
+        import time
+
+        def a():
+            return time.time()  # dclint: disable=DC201
+
+        def b():
+            return time.time()  # dclint: disable=DC101
+        """)
+    assert [(v.code, v.line) for v in vs] == [("DC201", 7)]
+
+
+def test_file_pragma_suppresses_whole_file(tmp_path):
+    vs = run_on(tmp_path, "src/repro/sim/x.py", """\
+        # dclint: disable-file=DC201
+        import time
+
+        def a():
+            return time.time()
+        """)
+    assert vs == []
+
+
+def test_pragma_disable_all(tmp_path):
+    vs = run_on(tmp_path, "src/repro/core/x.py",
+                "def f(x):\n"
+                "    assert x  # dclint: disable=all\n")
+    assert vs == []
+
+
+# =====================================================================
+# baseline burn-down
+# =====================================================================
+_ASSERT_FIXTURE = "def f(x):\n    assert x > 0\n"
+
+
+def _violations_of(tmp_path: Path) -> list[Violation]:
+    return lint_file(tmp_path / "src/repro/core/x.py", root=tmp_path)
+
+
+def test_baseline_suppresses_known_and_fails_new(tmp_path):
+    p = tmp_path / "src/repro/core/x.py"
+    p.parent.mkdir(parents=True)
+    p.write_text(_ASSERT_FIXTURE)
+    bl = tmp_path / "baseline.json"
+    baseline_mod.write(bl, _violations_of(tmp_path))
+
+    # the baselined violation is suppressed
+    new, baselined, stale = baseline_mod.split(
+        _violations_of(tmp_path), baseline_mod.load(bl))
+    assert new == [] and len(baselined) == 1 and stale == []
+
+    # a NEW violation alongside it fails even with the baseline
+    p.write_text(_ASSERT_FIXTURE + "def g(y):\n    assert y < 9\n")
+    new, baselined, stale = baseline_mod.split(
+        _violations_of(tmp_path), baseline_mod.load(bl))
+    assert len(new) == 1 and "y < 9" in new[0].source_line
+    assert len(baselined) == 1
+
+
+def test_baseline_stale_entry_is_pruned(tmp_path):
+    p = tmp_path / "src/repro/core/x.py"
+    p.parent.mkdir(parents=True)
+    p.write_text(_ASSERT_FIXTURE)
+    bl = tmp_path / "baseline.json"
+    baseline_mod.write(bl, _violations_of(tmp_path))
+
+    # pay the debt: the fixed file no longer matches the entry
+    p.write_text("def f(x):\n"
+                 "    if not x > 0:\n"
+                 "        raise RuntimeError('x')\n")
+    new, baselined, stale = baseline_mod.split(
+        _violations_of(tmp_path), baseline_mod.load(bl))
+    assert new == [] and baselined == [] and len(stale) == 1
+
+    baseline_mod.prune(bl, _violations_of(tmp_path))
+    assert baseline_mod.load(bl)["entries"] == []
+
+
+def test_baseline_fingerprint_survives_line_moves(tmp_path):
+    p = tmp_path / "src/repro/core/x.py"
+    p.parent.mkdir(parents=True)
+    p.write_text(_ASSERT_FIXTURE)
+    bl = tmp_path / "baseline.json"
+    baseline_mod.write(bl, _violations_of(tmp_path))
+
+    p.write_text("# a comment shifting every line\n\n" + _ASSERT_FIXTURE)
+    new, baselined, stale = baseline_mod.split(
+        _violations_of(tmp_path), baseline_mod.load(bl))
+    assert new == [] and len(baselined) == 1 and stale == []
+
+
+# =====================================================================
+# CLI + JSON schema
+# =====================================================================
+def _cli_fixture(tmp_path: Path) -> Path:
+    p = tmp_path / "src/repro/core/x.py"
+    p.parent.mkdir(parents=True)
+    p.write_text(_ASSERT_FIXTURE)
+    return p
+
+
+def test_cli_exit_codes(tmp_path):
+    _cli_fixture(tmp_path)
+    bl = tmp_path / "baseline.json"
+    argv = ["src", "--root", str(tmp_path), "--baseline", str(bl)]
+    assert dclint_main(argv) == 1          # non-baselined finding
+    baseline_mod.write(bl, _violations_of(tmp_path))
+    assert dclint_main(argv) == 0          # baselined -> clean
+    assert dclint_main(["no_such_dir", "--root", str(tmp_path)]) == 2
+
+
+def test_json_output_schema(tmp_path, capsys):
+    _cli_fixture(tmp_path)
+    bl = tmp_path / "baseline.json"
+    rc = dclint_main(["src", "--json", "--root", str(tmp_path),
+                      "--baseline", str(bl)])
+    report = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert report["version"] == 1
+    assert report["counts"] == {"new": 1, "baselined": 0,
+                                "stale_baseline": 0}
+    (row,) = report["violations"]
+    assert set(row) == {"path", "line", "col", "code", "message",
+                        "fingerprint", "baselined"}
+    assert row["code"] == "DC101" and row["baselined"] is False
+    assert row["path"] == "src/repro/core/x.py" and row["line"] == 2
+
+
+def test_repo_lints_clean():
+    """The acceptance gate, as a test: zero non-baselined violations in
+    the live tree (CI also runs the CLI as a blocking step)."""
+    rc = dclint_main(["src", "benchmarks"])
+    assert rc == 0
+
+
+# =====================================================================
+# eval_shape kernel-contract harness
+# =====================================================================
+def test_shapecheck_contracts_hold_for_moe_and_ssm_archs():
+    jax = pytest.importorskip("jax")  # noqa: F841
+    from tools.dclint import shapecheck
+
+    # one MoE arch and one SSM arch covers all four kernel contracts
+    results = shapecheck.run(archs=["qwen2-7b", "mamba2-1.3b"])
+    bad = [r for r in results if not r["ok"]]
+    assert bad == [], bad
+    kernels = {r["kernel"] for r in results}
+    assert {"flash_attention", "decode_attention", "ssd_scan"} <= kernels

@@ -1,0 +1,131 @@
+"""dclint — repo-native static analysis for the DSP serve-path contracts.
+
+The serve path's correctness claims (zero over-admission, weighted
+isolation ``sum(active_i*width_i) <= capacity``, deterministic replay,
+re-entrancy-safe provider drains, tracer-safe pallas kernels) are enforced
+at runtime by guarded raises and pinned by property tests — but every one
+of those guards was added *after* a bug shipped. dclint rejects the bug
+classes at authoring time instead:
+
+=====  ======================================================
+code   contract
+=====  ======================================================
+DC101  runtime invariants must be guarded raises, not ``assert``
+       (asserts are stripped under ``python -O``)
+DC201  control-plane + benchmark code must be deterministic
+       (no wall clock, no global RNG module state)
+DC301  ``on_grant``/``grant_listener`` callbacks must not re-enter
+       the provider ledger (request/release/amend/cancel or direct
+       ledger mutation) — the provider may be mid-drain
+DC401  slot counts and node units must not mix arithmetically
+       without passing through a width conversion
+DC501  pallas kernels must be tracer-safe (no Python control flow
+       on traced values, static BlockSpec shapes, no mutable
+       default args under ``jax.jit``)
+=====  ======================================================
+
+Run ``python -m tools.dclint src benchmarks`` (stdlib only; the optional
+``--shapecheck`` harness additionally needs jax for ``eval_shape``).
+Suppress a finding in place with ``# dclint: disable=DCxxx`` or park
+legacy findings in ``tools/dclint/baseline.json`` to burn down.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+from pathlib import Path
+
+__all__ = [
+    "Violation", "lint_file", "lint_paths", "fingerprint", "REPO_ROOT",
+]
+
+# repo root = parent of the tools/ package this file lives in
+REPO_ROOT = Path(__file__).resolve().parent.parent.parent
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding: a contract violation at ``path:line``."""
+    path: str          # repo-relative posix path
+    line: int
+    col: int
+    code: str          # DCxxx
+    message: str
+    source_line: str = ""   # stripped text of the offending line
+
+    def fingerprint(self) -> str:
+        """Line-number-free identity used by the baseline: moving code
+        around must not invalidate a baselined finding, but changing the
+        offending line (or fixing it) must."""
+        h = hashlib.sha1()
+        h.update(self.code.encode())
+        h.update(b"\0")
+        h.update(self.path.encode())
+        h.update(b"\0")
+        h.update(self.source_line.encode())
+        return h.hexdigest()[:16]
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+def fingerprint(v: Violation) -> str:
+    return v.fingerprint()
+
+
+def _source_line(src_lines: list[str], lineno: int) -> str:
+    if 1 <= lineno <= len(src_lines):
+        return src_lines[lineno - 1].strip()
+    return ""
+
+
+def lint_file(path: Path, *, root: Path | None = None) -> list[Violation]:
+    """Run every rule whose scope covers ``path``; pragma-suppressed
+    findings are dropped here (the baseline is applied by the caller)."""
+    from tools.dclint import config, pragmas
+    from tools.dclint.rules import RULES
+
+    root = root or REPO_ROOT
+    rel = config.relpath(path, root)
+    codes = config.rules_for(rel)
+    if not codes:
+        return []
+    try:
+        src = path.read_text(encoding="utf-8")
+    except (OSError, UnicodeDecodeError) as e:
+        return [Violation(rel, 1, 0, "DC000", f"unreadable: {e}")]
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:
+        return [Violation(rel, e.lineno or 1, e.offset or 0, "DC000",
+                          f"syntax error: {e.msg}")]
+    src_lines = src.splitlines()
+    suppressions = pragmas.collect(src_lines)
+    out: list[Violation] = []
+    for code in codes:
+        rule = RULES[code]
+        for line, col, msg in rule.check(tree, src_lines, rel):
+            if pragmas.suppressed(suppressions, code, line):
+                continue
+            out.append(Violation(rel, line, col, code, msg,
+                                 _source_line(src_lines, line)))
+    out.sort(key=lambda v: (v.path, v.line, v.col, v.code))
+    return out
+
+
+def lint_paths(paths: list[Path], *, root: Path | None = None
+               ) -> list[Violation]:
+    """Lint every ``.py`` file under the given files/directories."""
+    root = root or REPO_ROOT
+    files: list[Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(q for q in p.rglob("*.py")
+                                if "__pycache__" not in q.parts))
+        elif p.suffix == ".py":
+            files.append(p)
+    out: list[Violation] = []
+    for f in files:
+        out.extend(lint_file(f, root=root))
+    return out

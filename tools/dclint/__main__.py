@@ -1,0 +1,118 @@
+"""CLI: ``python -m tools.dclint [paths...] [--json] [--update-baseline]``.
+
+Exit codes: 0 clean (all findings baselined or none), 1 non-baselined
+findings (or shapecheck contract failures), 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.dclint import REPO_ROOT, Violation, lint_paths
+from tools.dclint import baseline as baseline_mod
+
+JSON_SCHEMA_VERSION = 1
+
+
+def _as_json(new: list[Violation], baselined: list[Violation],
+             stale: list[dict]) -> dict:
+    def rows(vs: list[Violation], is_baselined: bool) -> list[dict]:
+        return [
+            {"path": v.path, "line": v.line, "col": v.col, "code": v.code,
+             "message": v.message, "fingerprint": v.fingerprint(),
+             "baselined": is_baselined}
+            for v in vs
+        ]
+
+    return {
+        "version": JSON_SCHEMA_VERSION,
+        "violations": rows(new, False) + rows(baselined, True),
+        "stale_baseline": stale,
+        "counts": {"new": len(new), "baselined": len(baselined),
+                   "stale_baseline": len(stale)},
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.dclint",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=["src", "benchmarks"],
+                    help="files/directories to lint (default: src "
+                         "benchmarks, relative to the repo root)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable report on stdout (for CI)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="baseline file (default: tools/dclint/"
+                         "baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="prune stale entries from the baseline (burn-"
+                         "down); never adds entries unless --rebaseline")
+    ap.add_argument("--rebaseline", action="store_true",
+                    help="with --update-baseline: rewrite the baseline "
+                         "to ALL current findings (accepting new debt — "
+                         "use only when introducing a rule)")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root override (fixture tests)")
+    ap.add_argument("--shapecheck", action="store_true",
+                    help="also run the eval_shape kernel-contract "
+                         "harness (requires jax)")
+    args = ap.parse_args(argv)
+
+    root = (args.root or REPO_ROOT).resolve()
+    paths = []
+    for p in args.paths:
+        q = Path(p)
+        if not q.is_absolute():
+            q = root / q
+        if not q.exists():
+            print(f"dclint: path not found: {p}", file=sys.stderr)
+            return 2
+        paths.append(q)
+
+    violations = lint_paths(paths, root=root)
+    if args.no_baseline:
+        new, baselined, stale = violations, [], []
+    else:
+        data = baseline_mod.load(args.baseline)
+        new, baselined, stale = baseline_mod.split(violations, data)
+
+    if args.update_baseline:
+        path = args.baseline or baseline_mod.DEFAULT_PATH
+        keep = violations if args.rebaseline else baselined
+        baseline_mod.write(path, keep)
+        stale = []
+
+    if args.json:
+        print(json.dumps(_as_json(new, baselined, stale), indent=2))
+    else:
+        for v in new:
+            print(v.render())
+        if baselined:
+            print(f"dclint: {len(baselined)} baselined finding(s) "
+                  f"suppressed (burn-down: tools/dclint/baseline.json)")
+        for e in stale:
+            print(f"dclint: stale baseline entry (debt paid — run "
+                  f"--update-baseline to prune): {e['path']} {e['code']} "
+                  f"`{e.get('source_line', '')}`")
+        if not new:
+            print(f"dclint: clean ({len(new)} new, {len(baselined)} "
+                  f"baselined, {len(stale)} stale)")
+
+    rc = 1 if new else 0
+
+    if args.shapecheck:
+        from tools.dclint import shapecheck
+        src = root / "src"
+        if src.exists() and str(src) not in sys.path:
+            sys.path.insert(0, str(src))
+        rc = max(rc, shapecheck.main(json_out=args.json))
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,83 @@
+"""Committed-baseline burn-down for legacy violations.
+
+``tools/dclint/baseline.json`` holds fingerprints of known pre-existing
+violations. Semantics:
+
+- a current violation whose fingerprint is baselined is *suppressed*
+  (reported in the summary as baselined, exit stays 0);
+- a current violation NOT in the baseline **fails the run** — new debt
+  is rejected at authoring time;
+- a baselined fingerprint with no matching current violation is *stale*:
+  the debt was paid. Stale entries are reported, and
+  ``--update-baseline`` prunes them (it never adds entries unless
+  ``--rebaseline`` is also given) — the baseline can only shrink in
+  normal operation, which is what makes it a burn-down list rather
+  than a mute button.
+
+Fingerprints are line-number-free (code + path + offending source text),
+so moving code does not invalidate the baseline but editing the
+offending line does.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from tools.dclint import Violation
+
+DEFAULT_PATH = Path(__file__).resolve().parent / "baseline.json"
+SCHEMA_VERSION = 1
+
+
+def load(path: Path | None = None) -> dict:
+    path = path or DEFAULT_PATH
+    if not path.exists():
+        return {"version": SCHEMA_VERSION, "entries": []}
+    data = json.loads(path.read_text(encoding="utf-8"))
+    if data.get("version") != SCHEMA_VERSION:
+        raise ValueError(f"unsupported baseline version in {path}: "
+                         f"{data.get('version')!r}")
+    return data
+
+
+def split(violations: list[Violation], data: dict
+          ) -> tuple[list[Violation], list[Violation], list[dict]]:
+    """-> (new, baselined, stale_entries).
+
+    Matching is multiset-aware: N identical offending lines need N
+    baseline entries, so deleting one of two identical violations
+    still prunes one entry.
+    """
+    budget: dict[str, list[dict]] = {}
+    for e in data.get("entries", []):
+        budget.setdefault(e["fingerprint"], []).append(e)
+    new: list[Violation] = []
+    baselined: list[Violation] = []
+    for v in violations:
+        matches = budget.get(v.fingerprint())
+        if matches:
+            matches.pop()
+            baselined.append(v)
+        else:
+            new.append(v)
+    stale = [e for entries in budget.values() for e in entries]
+    return new, baselined, stale
+
+
+def write(path: Path, violations: list[Violation]) -> dict:
+    entries = [
+        {"fingerprint": v.fingerprint(), "code": v.code, "path": v.path,
+         "line": v.line, "source_line": v.source_line, "message": v.message}
+        for v in sorted(violations,
+                        key=lambda v: (v.path, v.line, v.col, v.code))
+    ]
+    data = {"version": SCHEMA_VERSION, "entries": entries}
+    path.write_text(json.dumps(data, indent=2) + "\n", encoding="utf-8")
+    return data
+
+
+def prune(path: Path, current: list[Violation]) -> dict:
+    """Keep only entries still matched by a current violation."""
+    data = load(path)
+    _, baselined, _ = split(current, data)
+    return write(path, baselined)

@@ -1,0 +1,76 @@
+"""Rule scoping: which contracts apply to which part of the tree.
+
+Scopes are path *prefixes* relative to the repo root. A rule runs on a
+file iff some prefix in its scope matches and no prefix in its exemption
+list does. ``launch/`` is exempt from DC201 by design: launch scripts
+legitimately read wall clock (run dirs, progress logging) and never feed
+the deterministic replay path.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+# rule -> path prefixes the rule runs on
+RULE_SCOPES: dict[str, tuple[str, ...]] = {
+    # runtime invariants live in the control plane: emulator core,
+    # serve drivers, discrete-event sim
+    "DC101": ("src/repro/core", "src/repro/serve", "src/repro/sim"),
+    # deterministic replay + bench gating cover the control plane AND
+    # the benchmarks that gate on its numbers
+    "DC201": ("src/repro/core", "src/repro/serve", "src/repro/sim",
+              "benchmarks"),
+    # grant callbacks are defined in the control plane
+    "DC301": ("src/repro/core", "src/repro/serve", "src/repro/sim"),
+    # slot-vs-node-unit arithmetic happens where engine slots meet
+    # provider grants: the serve layer
+    "DC401": ("src/repro/serve",),
+    # tracer safety is a kernels/ concern
+    "DC501": ("src/repro/kernels",),
+}
+
+# rule -> path prefixes exempted even when a scope prefix matches
+RULE_EXEMPT: dict[str, tuple[str, ...]] = {
+    "DC201": ("src/repro/launch",),
+}
+
+# --- DC401 identifier lexicon -------------------------------------------
+# Slot counts: how many batching slots an engine is serving.
+SLOT_NAMES = frozenset({"active", "slots", "active_count", "active_slots",
+                        "free_slots", "n_slots"})
+SLOT_SUFFIXES = ("_slots",)
+# Node units: the provider's grant denomination (1 slot = `width` units).
+UNIT_NAMES = frozenset({"owned", "granted", "capacity", "capacity_units",
+                        "nodes", "units", "busy"})
+UNIT_SUFFIXES = ("_units", "_nodes")
+# Width: node units per slot — multiplying a slot count by a width IS the
+# sanctioned conversion (as is dividing units by a width). (`free` is
+# deliberately absent from both lexicons: it is a slot list in the
+# engine and a unit count in the env; assignment taint disambiguates.)
+WIDTH_NAMES = frozenset({"width", "slot_width"})
+WIDTH_SUFFIXES = ("_width",)
+# Calls treated as width-valued regardless of receiver
+WIDTH_CALLS = frozenset({"width_of"})
+
+
+def relpath(path: Path, root: Path) -> str:
+    """Posix path relative to the repo root (absolute-posix fallback for
+    out-of-tree files, e.g. test fixtures in tmp dirs)."""
+    try:
+        return path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        return path.resolve().as_posix()
+
+
+def rules_for(rel: str) -> list[str]:
+    out = []
+    for code, scopes in sorted(RULE_SCOPES.items()):
+        if not any(_covers(s, rel) for s in scopes):
+            continue
+        if any(_covers(e, rel) for e in RULE_EXEMPT.get(code, ())):
+            continue
+        out.append(code)
+    return out
+
+
+def _covers(prefix: str, rel: str) -> bool:
+    return rel == prefix or rel.startswith(prefix + "/")

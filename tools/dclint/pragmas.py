@@ -1,0 +1,46 @@
+"""``# dclint: disable=DCxxx`` pragma suppression.
+
+Two forms:
+
+- line pragma — ``x = time.time()  # dclint: disable=DC201`` suppresses
+  the named codes (comma-separated, or ``all``) on that line only;
+- file pragma — ``# dclint: disable-file=DC401`` anywhere at column 0 in
+  the first 10 lines suppresses the codes for the whole file.
+
+A pragma is an *argued exception*: the comment should say why the
+contract does not apply (e.g. wall-clock timing of a benchmark harness
+measuring wall clock). Prefer fixing; baseline legacy debt instead.
+"""
+from __future__ import annotations
+
+import re
+
+_LINE_RE = re.compile(r"#\s*dclint:\s*disable=([A-Za-z0-9, ]+)")
+_FILE_RE = re.compile(r"^#\s*dclint:\s*disable-file=([A-Za-z0-9, ]+)")
+_FILE_SCAN_LINES = 10
+
+
+def _codes(group: str) -> frozenset[str]:
+    return frozenset(c.strip().upper() for c in group.split(",") if c.strip())
+
+
+def collect(src_lines: list[str]) -> dict[int, frozenset[str]]:
+    """Map line number -> suppressed codes; line 0 holds file-level codes."""
+    out: dict[int, frozenset[str]] = {}
+    for text in src_lines[:_FILE_SCAN_LINES]:
+        m = _FILE_RE.match(text)
+        if m:
+            out[0] = out.get(0, frozenset()) | _codes(m.group(1))
+    for i, text in enumerate(src_lines, start=1):
+        m = _LINE_RE.search(text)
+        if m:
+            out[i] = out.get(i, frozenset()) | _codes(m.group(1))
+    return out
+
+
+def suppressed(suppressions: dict[int, frozenset[str]], code: str,
+               line: int) -> bool:
+    for codes in (suppressions.get(0), suppressions.get(line)):
+        if codes and (code in codes or "ALL" in codes):
+            return True
+    return False

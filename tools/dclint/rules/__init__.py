@@ -1,0 +1,23 @@
+"""Rule registry. Each rule module exposes ``CODE``, ``SUMMARY`` and
+``check(tree, src_lines, rel_path) -> iterable[(line, col, message)]``;
+scoping and pragma/baseline handling live in the driver."""
+from __future__ import annotations
+
+from tools.dclint.rules import (
+    dc101_invariant_assert,
+    dc201_determinism,
+    dc301_drain_reentrancy,
+    dc401_unit_discipline,
+    dc501_tracer_safety,
+)
+
+RULES = {
+    mod.CODE: mod
+    for mod in (
+        dc101_invariant_assert,
+        dc201_determinism,
+        dc301_drain_reentrancy,
+        dc401_unit_discipline,
+        dc501_tracer_safety,
+    )
+}

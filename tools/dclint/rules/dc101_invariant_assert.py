@@ -1,0 +1,36 @@
+"""DC101 — runtime invariants must be guarded raises, not ``assert``.
+
+``python -O`` strips assert statements. In the control plane every
+assert guards ledger/scheduling state (over-admission, lease conservation,
+dependency-graph integrity), so under ``-O`` the invariant silently stops
+being checked — exactly the failure mode PR 4 fixed for the serve suites
+(``ServeInvariantError`` and guarded ``RuntimeError`` raises survive
+``-O``; asserts do not). Any ``assert`` in scope is flagged.
+
+Fix pattern::
+
+    # before
+    assert extra <= self.free, (extra, self.free)
+    # after
+    if extra > self.free:
+        raise RuntimeError(
+            f"grow exceeds free nodes: {extra} > {self.free}")
+"""
+from __future__ import annotations
+
+import ast
+
+CODE = "DC101"
+SUMMARY = ("bare `assert` guards a runtime invariant; use a guarded raise "
+           "(ServeInvariantError / RuntimeError) so it survives python -O")
+
+
+def check(tree: ast.AST, src_lines: list[str], rel: str):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assert):
+            cond = ast.unparse(node.test)
+            if len(cond) > 60:
+                cond = cond[:57] + "..."
+            yield (node.lineno, node.col_offset,
+                   f"bare assert `{cond}` is stripped under python -O; "
+                   f"guard a runtime invariant with an explicit raise")

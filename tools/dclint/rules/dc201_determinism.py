@@ -1,0 +1,93 @@
+"""DC201 — no wall clock or global RNG state in the deterministic core.
+
+Replay parity (emulator-vs-serve bit-parity, ``ServeFleet(N=1)`` ==
+``ServeDriver``) and the bench regression gate both depend on runs being
+pure functions of their seeds. Wall-clock reads (``time.time()``,
+``datetime.now()``) and module-state RNGs (``random.random()``,
+``np.random.rand()``/``np.random.seed()``) break that: the same seed no
+longer reproduces the same artifact, and the history-window gate compares
+noise. ``launch/`` is exempt via config (run dirs and progress logs may
+read the clock); benchmarks measuring wall-clock *performance* use
+``time.perf_counter()``, which is explicitly a duration clock and is not
+flagged.
+
+Fix pattern: thread a seeded ``np.random.default_rng(seed)`` /
+``random.Random(seed)`` through, take sim time from the driver's
+``Clock``, and time perf with ``time.perf_counter()``.
+"""
+from __future__ import annotations
+
+import ast
+
+CODE = "DC201"
+SUMMARY = ("wall-clock or global-RNG call in deterministic scope; "
+           "use a seeded rng / driver clock / perf_counter")
+
+# attr called on the `time` module
+_TIME_BANNED = {"time", "time_ns", "localtime", "gmtime", "ctime"}
+# attr called on `datetime`/`datetime.datetime`/`datetime.date`
+_DATETIME_BANNED = {"now", "utcnow", "today"}
+# module-state constructors that are fine on `random`
+_RANDOM_ALLOWED = {"Random", "SystemRandom", "getstate", "setstate"}
+# seeded-generator API that is fine on `np.random`
+_NP_RANDOM_ALLOWED = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                      "Philox", "MT19937", "BitGenerator", "RandomState"}
+# NB: RandomState(seed) is an explicitly seeded legacy generator object,
+# not module state — allowed.
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def check(tree: ast.AST, src_lines: list[str], rel: str):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            dotted = _dotted(node.func)
+            if dotted is None:
+                continue
+            parts = dotted.split(".")
+            head, tail = parts[0], parts[-1]
+            if head == "time" and len(parts) == 2 and tail in _TIME_BANNED:
+                yield (node.lineno, node.col_offset,
+                       f"`{dotted}()` reads the wall clock; replay "
+                       f"determinism requires driver-clock time "
+                       f"(perf timing: use time.perf_counter())")
+            elif (tail in _DATETIME_BANNED and len(parts) >= 2
+                  and parts[-2] in ("datetime", "date")):
+                yield (node.lineno, node.col_offset,
+                       f"`{dotted}()` reads the wall clock; thread sim "
+                       f"time from the driver's Clock instead")
+            elif (head == "random" and len(parts) == 2
+                  and tail not in _RANDOM_ALLOWED):
+                yield (node.lineno, node.col_offset,
+                       f"`{dotted}()` mutates/reads global RNG state; "
+                       f"use a seeded random.Random(seed) instance")
+            elif (len(parts) >= 3 and parts[-2] == "random"
+                  and parts[-3] in ("np", "numpy")
+                  and tail not in _NP_RANDOM_ALLOWED):
+                yield (node.lineno, node.col_offset,
+                       f"`{dotted}()` uses numpy's global RNG state; "
+                       f"use np.random.default_rng(seed)")
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "time":
+                for a in node.names:
+                    if a.name in _TIME_BANNED:
+                        yield (node.lineno, node.col_offset,
+                               f"`from time import {a.name}` imports a "
+                               f"wall-clock read into deterministic scope")
+            elif node.module == "random":
+                for a in node.names:
+                    if a.name not in _RANDOM_ALLOWED and a.name != "*":
+                        yield (node.lineno, node.col_offset,
+                               f"`from random import {a.name}` imports "
+                               f"global-RNG-state access; use "
+                               f"random.Random(seed)")

@@ -1,0 +1,177 @@
+"""DC301 — grant callbacks must not re-enter the provider ledger.
+
+``ResourceProvider._drain`` walks its admission queue invoking parked
+requests' ``on_grant`` callbacks (and ``RuntimeEnv`` forwards grants to a
+``grant_listener``). A callback that calls ``request``/``release``/
+``amend``/``cancel``/``submit_request`` on the provision service — or
+mutates ledger state directly — mutates the very queue/ledger the drain
+is iterating. PR 5 pinned this hazard with a hypothesis property
+(on_grant amending/cancelling OTHER parked requests); this rule rejects
+the code shape outright.
+
+Detection is a lightweight intra-module call-graph walk: roots are
+functions passed as ``on_grant=`` keyword arguments, assigned to a
+``.grant_listener`` attribute, or named ``on_grant``; edges are direct
+calls to module-level functions or ``self.`` methods. Flagged inside the
+reachable set: provider/provision-receiver calls to the ledger-mutating
+API, and direct writes to ledger attributes (``allocated``,
+``open_leases``, ``admission_queue``, ...).
+
+Fix pattern: a callback validates the offer against live need, commits
+*its own* bookkeeping, and returns the accepted amount — deferring any
+further provider traffic to the next scan tick (see
+``RuntimeEnv._apply_grant``).
+"""
+from __future__ import annotations
+
+import ast
+
+CODE = "DC301"
+SUMMARY = ("provider ledger re-entered from an on_grant/grant_listener "
+           "callback (the provider may be mid-drain)")
+
+_BANNED_METHODS = frozenset({"request", "release", "amend", "cancel",
+                             "submit_request"})
+_LEDGER_ATTRS = frozenset({"allocated", "open_leases", "closed_leases",
+                           "admission_queue", "adjust_events",
+                           "_alloc_curve"})
+_PROVIDERISH = ("provision", "provider")
+
+
+def _chain_names(node: ast.AST) -> list[str]:
+    """Name segments of an attribute/subscript chain, outermost first."""
+    names: list[str] = []
+    while True:
+        if isinstance(node, ast.Attribute):
+            names.append(node.attr)
+            node = node.value
+        elif isinstance(node, ast.Subscript):
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        elif isinstance(node, ast.Name):
+            names.append(node.id)
+            return names
+        else:
+            return names
+
+
+def _provider_receiver(names: list[str]) -> bool:
+    return any(any(p in seg for p in _PROVIDERISH) for seg in names)
+
+
+def _callee_name(node: ast.AST) -> str | None:
+    """Function a call/reference resolves to, as a bare name."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+class _Module:
+    """Defs, callback roots and call edges of one module."""
+
+    def __init__(self, tree: ast.AST):
+        self.defs: dict[str, list[ast.AST]] = {}
+        self.roots: dict[str, str] = {}   # fn name -> how it became a root
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs.setdefault(node.name, []).append(node)
+                if node.name == "on_grant":
+                    self.roots.setdefault(node.name, "def on_grant")
+            elif isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg == "on_grant":
+                        n = _callee_name(kw.value)
+                        if n:
+                            self.roots.setdefault(n, "passed as on_grant=")
+            elif isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if (isinstance(tgt, ast.Attribute)
+                            and tgt.attr == "grant_listener"):
+                        n = _callee_name(node.value)
+                        if n:
+                            self.roots.setdefault(
+                                n, "assigned to .grant_listener")
+
+    def edges(self, fn: ast.AST) -> set[str]:
+        out: set[str] = set()
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if isinstance(func, ast.Name):
+                out.add(func.id)
+            elif (isinstance(func, ast.Attribute)
+                  and isinstance(func.value, ast.Name)
+                  and func.value.id in ("self", "cls")):
+                out.add(func.attr)
+            # functools.partial(self._fn, ...) keeps the edge
+            name = _callee_name(func)
+            if name == "partial" and node.args:
+                target = _callee_name(node.args[0])
+                if target:
+                    out.add(target)
+        return out
+
+
+def check(tree: ast.AST, src_lines: list[str], rel: str):
+    mod = _Module(tree)
+    if not mod.roots:
+        return
+    # BFS over the intra-module call graph, remembering one call path
+    # per function for the diagnostic
+    paths: dict[str, tuple[str, ...]] = {}
+    queue: list[str] = []
+    for root in mod.roots:
+        if root in mod.defs and root not in paths:
+            paths[root] = (root,)
+            queue.append(root)
+    while queue:
+        name = queue.pop()
+        for fn in mod.defs.get(name, ()):
+            for callee in mod.edges(fn):
+                if callee in mod.defs and callee not in paths:
+                    paths[callee] = paths[name] + (callee,)
+                    queue.append(callee)
+
+    seen: set[tuple[int, int]] = set()
+    for name, path in sorted(paths.items()):
+        root = path[0]
+        via = (" via " + " -> ".join(path)) if len(path) > 1 else ""
+        how = mod.roots[root]
+        for fn in mod.defs.get(name, ()):
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    callee = _callee_name(node.func)
+                    if (callee in _BANNED_METHODS
+                            and isinstance(node.func, ast.Attribute)
+                            and _provider_receiver(
+                                _chain_names(node.func.value))):
+                        key = (node.lineno, node.col_offset)
+                        if key not in seen:
+                            seen.add(key)
+                            yield (node.lineno, node.col_offset,
+                                   f"`{ast.unparse(node.func)}()` called "
+                                   f"from grant callback `{root}` "
+                                   f"({how}){via}: the provider may be "
+                                   f"mid-drain; defer to the next scan")
+                elif isinstance(node, (ast.Assign, ast.AugAssign,
+                                       ast.Delete)):
+                    targets = (node.targets if isinstance(node, ast.Assign)
+                               else node.targets if isinstance(node,
+                                                               ast.Delete)
+                               else [node.target])
+                    for tgt in targets:
+                        names = _chain_names(tgt)
+                        hit = _LEDGER_ATTRS.intersection(names)
+                        if hit:
+                            key = (node.lineno, node.col_offset)
+                            if key not in seen:
+                                seen.add(key)
+                                yield (node.lineno, node.col_offset,
+                                       f"ledger state `{sorted(hit)[0]}` "
+                                       f"mutated from grant callback "
+                                       f"`{root}` ({how}){via}: the "
+                                       f"drain loop iterates this state")

@@ -1,0 +1,183 @@
+"""DC401 — slot counts and node units must not mix without a width.
+
+Since PR 5, provider grants, ``RuntimeEnv.owned``/``busy`` and task
+``nodes`` are denominated in *node units* while engines count *batching
+slots*; a slot of a width-``w`` tenant costs ``w`` units. The PR 5 bug
+class was exactly `active_slots <= granted_units` comparisons that were
+only correct at width 1. This rule classifies identifiers by lexicon
+(``tools.dclint.config``: ``active``/``*_slots`` are slots; ``owned``/
+``granted``/``capacity``/``*_units``/``*_nodes`` are units; ``width``/
+``*_width`` are converters) and flags additive arithmetic or comparisons
+whose operands classify as SLOT on one side and UNIT on the other.
+
+Multiplying a slot quantity by a width converts it to units (and
+dividing units by a width converts back); local assignments propagate
+the classification, so::
+
+    active = self.engine.active_count * self.slot_width   # -> UNIT
+    if active > self.env.owned:                           # ok
+
+passes, while::
+
+    if self.engine.active_count > self.env.owned:         # DC401
+
+is flagged. Fix pattern: weight by the tenant's width (or route through
+a ``width_of(...)`` helper) before comparing.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.dclint import config
+
+CODE = "DC401"
+SUMMARY = ("slot-count and node-unit quantities mixed without a width "
+           "conversion")
+
+SLOT, UNIT, WIDTH = "slot-count", "node-unit", "width"
+
+
+def _lex(name: str) -> str | None:
+    if name in config.WIDTH_NAMES or name.endswith(config.WIDTH_SUFFIXES):
+        return WIDTH
+    if name in config.SLOT_NAMES or name.endswith(config.SLOT_SUFFIXES):
+        return SLOT
+    if name in config.UNIT_NAMES or name.endswith(config.UNIT_SUFFIXES):
+        return UNIT
+    return None
+
+
+def _mix(a: str | None, b: str | None) -> bool:
+    return {a, b} == {SLOT, UNIT}
+
+
+class _FnChecker(ast.NodeVisitor):
+    """One function scope: forward-order classification with assignment
+    taint (a local assigned a units expression stays units even if its
+    name reads slot-ish, and vice versa)."""
+
+    def __init__(self, report):
+        self.env: dict[str, str | None] = {}
+        self.report = report
+
+    # ------------------------------------------------- classification
+    def classify(self, node: ast.AST) -> str | None:
+        if isinstance(node, ast.Name):
+            if node.id in self.env:
+                return self.env[node.id]
+            return _lex(node.id)
+        if isinstance(node, ast.Attribute):
+            return _lex(node.attr)
+        if isinstance(node, ast.Subscript):
+            return self.classify(node.value)
+        if isinstance(node, ast.UnaryOp):
+            return self.classify(node.operand)
+        if isinstance(node, ast.Call):
+            func = node.func
+            name = (func.attr if isinstance(func, ast.Attribute)
+                    else func.id if isinstance(func, ast.Name) else None)
+            if name in config.WIDTH_CALLS:
+                return WIDTH
+            return None
+        if isinstance(node, ast.IfExp):
+            a, b = self.classify(node.body), self.classify(node.orelse)
+            return a if a == b else None
+        if isinstance(node, ast.BinOp):
+            left = self.classify(node.left)
+            right = self.classify(node.right)
+            if isinstance(node.op, ast.Mult):
+                if WIDTH in (left, right):
+                    other = right if left == WIDTH else left
+                    return WIDTH if other == WIDTH else UNIT
+                if UNIT in (left, right):
+                    return UNIT
+                if SLOT in (left, right):
+                    return SLOT
+                return None
+            if isinstance(node.op, (ast.Div, ast.FloorDiv)):
+                if left == UNIT and right == WIDTH:
+                    return SLOT
+                return left
+            if isinstance(node.op, (ast.Add, ast.Sub)):
+                if _mix(left, right):
+                    self.report(node, left, right)
+                return (UNIT if UNIT in (left, right)
+                        else SLOT if SLOT in (left, right) else None)
+            return None
+        return None
+
+    # ------------------------------------------------------ statements
+    def visit_Compare(self, node: ast.Compare) -> None:
+        operands = [node.left] + list(node.comparators)
+        classes = [self.classify(o) for o in operands]
+        for (a, an), (b, bn) in zip(zip(classes, operands),
+                                    zip(classes[1:], operands[1:])):
+            if _mix(a, b):
+                self.report(node, a, b)
+                break
+        self.generic_visit(node)
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        self.classify(node)          # reports additive mixes
+        self.generic_visit(node)
+
+    def _bind(self, target: ast.AST, cls: str | None) -> None:
+        if isinstance(target, ast.Name):
+            self.env[target.id] = cls
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt, None)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node)
+        cls = self.classify(node.value)
+        for tgt in node.targets:
+            self._bind(tgt, cls)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        self.generic_visit(node)
+        if node.value is not None:
+            self._bind(node.target, self.classify(node.value))
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.generic_visit(node)
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            tcls = self.classify(node.target)
+            vcls = self.classify(node.value)
+            if _mix(tcls, vcls):
+                self.report(node, tcls, vcls)
+
+    def visit_For(self, node: ast.For) -> None:
+        self._bind(node.target, None)
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node) -> None:
+        pass                          # nested defs get their own scope
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+
+
+def check(tree: ast.AST, src_lines: list[str], rel: str):
+    found: list[tuple[int, int, str]] = []
+    seen: set[tuple[int, int]] = set()
+
+    def report(node: ast.AST, a: str | None, b: str | None) -> None:
+        key = (node.lineno, node.col_offset)
+        if key in seen:
+            return
+        seen.add(key)
+        expr = ast.unparse(node)
+        if len(expr) > 60:
+            expr = expr[:57] + "..."
+        found.append((node.lineno, node.col_offset,
+                      f"`{expr}` mixes a {SLOT} with a {UNIT} without a "
+                      f"width conversion (multiply slots by the tenant "
+                      f"width, or divide units by it, first)"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            checker = _FnChecker(report)
+            for stmt in node.body:
+                checker.visit(stmt)
+    yield from sorted(found)

@@ -1,0 +1,171 @@
+"""DC501 — pallas kernels must be tracer-safe.
+
+Three bug classes that surface as tracer errors at best (and silent
+mis-compiles at worst), caught at authoring time:
+
+1. **Python control flow on traced values.** Inside a kernel body
+   (any function passed to ``pl.pallas_call``) every positional
+   parameter is a ``Ref`` and every ``pl.program_id`` is traced; a
+   Python ``if``/``while`` on them evaluates the *tracer*, not the
+   value. Use ``pl.when``/``lax.cond``/``lax.fori_loop``. Keyword-only
+   parameters are treated as static (the repo binds static kwargs via
+   ``functools.partial``, e.g. ``block_s``/``scale``).
+2. **Non-static shapes in ``pl.BlockSpec``.** Block shapes must be
+   Python ints at trace time: literals, names, ``x.shape[i]`` and
+   arithmetic over them are fine; calls (``jnp.*``) or subscripts of
+   array values (``lengths[0]``) are traced and flagged.
+3. **Mutable default arguments.** A ``jax.jit``-wrapped function
+   captures its defaults at trace time; a mutable default (``[]``,
+   ``{}``, ``np.zeros(...)``) aliases state across calls and silently
+   bakes the first call's contents into the compiled artifact.
+
+The static rule is complemented by the ``--shapecheck`` harness
+(``tools.dclint.shapecheck``), which abstractly evaluates every kernel's
+shape/dtype contract against the registered model configs via
+``jax.eval_shape`` — no accelerator required.
+"""
+from __future__ import annotations
+
+import ast
+
+CODE = "DC501"
+SUMMARY = ("tracer hazard in pallas kernel (python control flow on traced "
+           "value / non-static BlockSpec shape / mutable default)")
+
+_STATIC_CALLS = frozenset({"len", "int", "min", "max", "abs", "round"})
+_MUTABLE_CALLS = frozenset({"list", "dict", "set", "bytearray",
+                            "zeros", "ones", "empty", "full", "array",
+                            "zeros_like", "ones_like", "arange"})
+
+
+def _callee(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _kernel_fn_names(tree: ast.AST) -> set[str]:
+    """Names of functions passed (possibly via functools.partial) as the
+    first argument of a ``pl.pallas_call``."""
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _callee(node.func) == "pallas_call" and node.args):
+            continue
+        first = node.args[0]
+        if isinstance(first, ast.Call) and _callee(first.func) == "partial":
+            first = first.args[0] if first.args else first
+        name = _callee(first)
+        if name:
+            names.add(name)
+    return names
+
+
+def _names_in(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _has_traced_call(node: ast.AST) -> bool:
+    """program_id/num_programs (and ref loads x[...] are caught via the
+    name taint, not here)."""
+    for n in ast.walk(node):
+        if (isinstance(n, ast.Call)
+                and _callee(n.func) in ("program_id", "num_programs")):
+            return True
+    return False
+
+
+def _check_kernel_body(fn: ast.FunctionDef):
+    a = fn.args
+    traced = {p.arg for p in a.posonlyargs + a.args if p.arg != "self"}
+    # kwonly params are static closure config (functools.partial binding).
+    # Taint to a fixpoint: ast.walk order is not source order, so one
+    # pass could miss a chain assigned "upward" in the tree.
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                if (_names_in(node.value) & traced
+                        or _has_traced_call(node.value)):
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name) and tgt.id not in traced:
+                            traced.add(tgt.id)
+                            changed = True
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.While)):
+            hit = _names_in(node.test) & traced
+            if hit or _has_traced_call(node.test):
+                what = (f"`{sorted(hit)[0]}`" if hit
+                        else "a pl.program_id value")
+                kind = "if" if isinstance(node, ast.If) else "while"
+                yield (node.lineno, node.col_offset,
+                       f"python `{kind}` on traced value {what} inside "
+                       f"kernel `{fn.name}`; use pl.when / lax.cond / "
+                       f"lax.fori_loop")
+
+
+def _static_shape_elt(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return node.value is None or isinstance(node.value, int)
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        return True
+    if isinstance(node, ast.UnaryOp):
+        return _static_shape_elt(node.operand)
+    if isinstance(node, ast.BinOp):
+        return (_static_shape_elt(node.left)
+                and _static_shape_elt(node.right))
+    if isinstance(node, ast.Subscript):
+        # x.shape[0] is static at trace time; lengths[0] is a traced load
+        return (isinstance(node.value, ast.Attribute)
+                and node.value.attr == "shape")
+    if isinstance(node, ast.Call):
+        return (_callee(node.func) in _STATIC_CALLS
+                and all(_static_shape_elt(x) for x in node.args))
+    return False
+
+
+def _check_blockspecs(tree: ast.AST):
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _callee(node.func) == "BlockSpec" and node.args):
+            continue
+        shape = node.args[0]
+        elts = shape.elts if isinstance(shape, ast.Tuple) else [shape]
+        for elt in elts:
+            if not _static_shape_elt(elt):
+                yield (elt.lineno, elt.col_offset,
+                       f"BlockSpec shape entry `{ast.unparse(elt)}` is "
+                       f"not statically resolvable at trace time; block "
+                       f"shapes must be python ints (shape attrs and "
+                       f"arithmetic over them are fine)")
+
+
+def _check_mutable_defaults(tree: ast.AST):
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        defaults = list(fn.args.defaults) + [
+            d for d in fn.args.kw_defaults if d is not None]
+        for d in defaults:
+            mutable = isinstance(d, (ast.List, ast.Dict, ast.Set)) or (
+                isinstance(d, ast.Call)
+                and _callee(d.func) in _MUTABLE_CALLS)
+            if mutable:
+                yield (d.lineno, d.col_offset,
+                       f"mutable default `{ast.unparse(d)}` on "
+                       f"`{fn.name}`: jax.jit captures defaults at trace "
+                       f"time, aliasing state across calls; default to "
+                       f"None and construct inside")
+
+
+def check(tree: ast.AST, src_lines: list[str], rel: str):
+    kernel_names = _kernel_fn_names(tree)
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.FunctionDef)
+                and node.name in kernel_names):
+            yield from _check_kernel_body(node)
+    yield from _check_blockspecs(tree)
+    yield from _check_mutable_defaults(tree)

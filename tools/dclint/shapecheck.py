@@ -1,0 +1,131 @@
+"""Abstract-interpretation smoke harness for the pallas kernel contracts.
+
+``jax.eval_shape`` traces each kernel with shape/dtype-only abstract
+values — no accelerator, no FLOPs — and the result is checked against the
+kernel's documented contract, instantiated for every registered model
+config (``repro.configs.registry``):
+
+- ``flash_attention``: (BH,S,hd) x (BH,Sk,hd)^2 -> (BH,S,hd), q dtype
+- ``decode_attention``: (B,H,hd) x (B,S,KVH,hd)^2 + (B,) lengths
+  -> (B,H,hd), q dtype
+- ``moe_gmm`` (MoE configs): (E,C,d) x (E,d,f) -> (E,C,f), x dtype
+- ``ssd_scan`` (SSM/hybrid configs): (B,S,nh,hp)... -> y (B,S,nh,hp)
+  fp32 + state (B,nh,hp,ds) fp32
+
+A kernel edit that breaks a shape/dtype contract for ANY registered
+config fails here before a TPU ever sees it. Gated on jax being
+importable so the static linter stays stdlib-only.
+"""
+from __future__ import annotations
+
+import json
+
+BATCH, SEQ = 2, 64      # abstract sizes; S must cover chunk/block minima
+
+
+def _checks(cfg):
+    """Yield (kernel_name, fn, arg_specs, expected (shape, dtype) list)
+    for one model config. Imports stay inside so jax loads lazily."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.decode_attention import decode_attention
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.moe_gmm import moe_gmm
+    from repro.kernels.ssd_scan import ssd_scan
+
+    S = jax.ShapeDtypeStruct
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    H, KVH = cfg.n_heads, cfg.n_kv_heads or cfg.n_heads
+    for dtype in (jnp.float32, jnp.bfloat16):
+        q = S((BATCH * H, SEQ, hd), dtype)
+        kv = S((BATCH * H, SEQ, hd), dtype)
+        yield ("flash_attention",
+               lambda q, k, v: flash_attention(
+                   q, k, v, causal=True, block_q=32, block_k=32,
+                   interpret=True),
+               (q, kv, kv), [((BATCH * H, SEQ, hd), dtype)])
+        dq = S((BATCH, H, hd), dtype)
+        cache = S((BATCH, SEQ, KVH, hd), dtype)
+        lengths = S((BATCH,), jnp.int32)
+        yield ("decode_attention",
+               lambda q, k, v, l: decode_attention(
+                   q, k, v, l, block_s=32, interpret=True),
+               (dq, cache, cache, lengths), [((BATCH, H, hd), dtype)])
+        if cfg.moe and cfg.n_experts:
+            E, C = cfg.n_experts, 32
+            x = S((E, C, cfg.d_model), dtype)
+            w = S((E, cfg.d_model, cfg.d_ff_expert), dtype)
+            yield ("moe_gmm",
+                   lambda x, w: moe_gmm(x, w, block_c=32, block_f=32,
+                                        block_d=32, interpret=True),
+                   (x, w), [((E, C, cfg.d_ff_expert), dtype)])
+        if cfg.ssm:
+            d_inner = cfg.d_model * cfg.ssm_expand
+            nh = max(d_inner // cfg.ssm_head_dim, 1)
+            hp, ds = cfg.ssm_head_dim, cfg.d_state
+            chunk = min(cfg.ssm_chunk, SEQ)
+            seq = chunk * max(SEQ // chunk, 1)
+            x = S((BATCH, seq, nh, hp), dtype)
+            dt = S((BATCH, seq, nh), jnp.float32)
+            A = S((nh,), jnp.float32)
+            bg = S((BATCH, seq, 1, ds), dtype)
+            yield ("ssd_scan",
+                   lambda x, dt, A, b, c, _ck=chunk: ssd_scan(
+                       x, dt, A, b, c, chunk=_ck, interpret=True),
+                   (x, dt, A, bg, bg),
+                   [((BATCH, seq, nh, hp), jnp.float32),
+                    ((BATCH, nh, hp, ds), jnp.float32)])
+
+
+def run(archs=None) -> list[dict]:
+    import jax
+
+    from repro.configs.registry import ARCHS, get_smoke_config
+
+    results: list[dict] = []
+    for arch in sorted(archs or ARCHS):
+        cfg = get_smoke_config(arch)
+        for name, fn, specs, expected in _checks(cfg):
+            row = {"arch": arch, "kernel": name,
+                   "dtype": str(specs[0].dtype), "ok": True, "detail": ""}
+            try:
+                out = jax.eval_shape(fn, *specs)
+            except Exception as e:  # tracer/shape error IS the finding
+                row["ok"] = False
+                row["detail"] = f"{type(e).__name__}: {e}"
+                results.append(row)
+                continue
+            leaves = jax.tree_util.tree_leaves(out)
+            got = [(tuple(x.shape), x.dtype) for x in leaves]
+            want = [(tuple(s), d) for s, d in expected]
+            if got != want:
+                row["ok"] = False
+                row["detail"] = f"expected {want}, got {got}"
+            results.append(row)
+    return results
+
+
+def main(json_out: bool = False) -> int:
+    try:
+        import jax  # noqa: F401
+    except Exception as e:
+        print(f"dclint shapecheck: jax unavailable ({e}); skipping")
+        return 0
+    results = run()
+    bad = [r for r in results if not r["ok"]]
+    if json_out:
+        print(json.dumps({"shapecheck": results,
+                          "failures": len(bad)}, indent=2))
+    else:
+        for r in bad:
+            print(f"dclint shapecheck: {r['arch']}/{r['kernel']} "
+                  f"[{r['dtype']}]: {r['detail']}")
+        print(f"dclint shapecheck: {len(results) - len(bad)}/"
+              f"{len(results)} kernel contracts hold")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())
