@@ -13,6 +13,13 @@ Metrics are directional:
   - ``zero``   is an invariant (over-admissions, isolation violations):
     fail when nonzero, regardless of tolerance
 
+Wall-clock metrics (``workflows_per_sec``) take a per-metric tolerance
+multiplier (``tol_mult`` in the spec) — timing on shared CI runners is
+far noisier than the deterministic economics, so those metrics gate only
+order-of-magnitude collapses, not jitter. Metrics absent from a row (or
+from an older baseline that predates them) are skipped, not failed, so
+adding a metric never invalidates committed history.
+
 The history window exists because a single committed baseline ratchets:
 each PR may slip a metric by just under the tolerance, and refreshing the
 baseline bakes the slip in — K PRs later the metric has drifted K
@@ -61,7 +68,9 @@ SPECS: dict[str, dict] = {
             "slot_utilization": "higher",
             "over_admissions": "zero",
             "isolation_violations": "zero",
+            "workflows_per_sec": "higher",
         },
+        "tol_mult": {"workflows_per_sec": 4.0},
     },
     "scale_curve": {
         "rows": lambda d: d["curve"],
@@ -74,20 +83,37 @@ SPECS: dict[str, dict] = {
     },
     "serve_trace": {
         # single-cell benchmark: synthesize one row from the top level
-        "rows": lambda d: [{
+        # (dict-comprehension guard: older artifacts predate wf/s)
+        "rows": lambda d: [dict({
             "cell": "dsp-vs-dedicated",
             "utilization_gain": d["utilization_gain"],
             "throughput_ratio": d["throughput_ratio"],
             "billed_ratio": d["billed_ratio"],
             "over_admissions": d["dsp"]["over_admissions"],
-        }],
+        }, **({"workflows_per_sec": d["dsp"]["workflows_per_sec"]}
+              if "workflows_per_sec" in d["dsp"] else {}))],
         "key": ("cell",),
         "metrics": {
             "utilization_gain": "higher",
             "throughput_ratio": "higher",
             "billed_ratio": "lower",
             "over_admissions": "zero",
+            "workflows_per_sec": "higher",
         },
+        "tol_mult": {"workflows_per_sec": 4.0},
+    },
+    "serve_scale": {
+        # columnar-vs-scalar throughput at 1e5 workflows; rows keyed by
+        # execution mode. ``stats_mismatches`` only exists on the
+        # columnar row (missing metrics are skipped, not failed).
+        "rows": lambda d: d["runs"],
+        "key": ("mode",),
+        "metrics": {
+            "workflows_per_sec": "higher",
+            "over_admissions": "zero",
+            "stats_mismatches": "zero",
+        },
+        "tol_mult": {"workflows_per_sec": 4.0},
     },
 }
 
@@ -133,21 +159,29 @@ def compare(current: dict, baseline: dict, tol: float) -> list[str]:
         if base is None:
             continue  # new row (e.g. an added N): nothing to regress against
         for metric, direction in spec["metrics"].items():
-            c, b = cur[metric], base[metric]
+            if metric not in cur:
+                continue  # metric absent from this row (e.g. the
+                # scalar serve_scale row carries no mismatch counter)
+            c = cur[metric]
             if direction == "zero":
                 if c != 0:
                     failures.append(f"{name}{key}: {metric} = {c} "
                                     f"(invariant: must be 0)")
-            elif direction == "lower":
-                if c > b * (1 + tol):
+                continue
+            if metric not in base:
+                continue  # older baseline predates the metric
+            b = base[metric]
+            mtol = tol * spec.get("tol_mult", {}).get(metric, 1.0)
+            if direction == "lower":
+                if c > b * (1 + mtol):
                     failures.append(f"{name}{key}: {metric} rose "
                                     f"{b:.4g} -> {c:.4g} "
-                                    f"(tolerance {tol:.0%})")
+                                    f"(tolerance {mtol:.0%})")
             elif direction == "higher":
-                if c < b * (1 - tol):
+                if c < b * (1 - mtol):
                     failures.append(f"{name}{key}: {metric} fell "
                                     f"{b:.4g} -> {c:.4g} "
-                                    f"(tolerance {tol:.0%})")
+                                    f"(tolerance {mtol:.0%})")
     return failures
 
 
@@ -197,19 +231,22 @@ def compare_to_history(current: dict, entries: list[dict],
     for row in spec["rows"](current):
         key = _row_key(row, spec["key"])
         for metric, values in window.get(key, {}).items():
+            if metric not in row:
+                continue
             med = statistics.median(values)
             c = row[metric]
             direction = spec["metrics"][metric]
-            if direction == "lower" and c > med * (1 + tol):
+            mtol = tol * spec.get("tol_mult", {}).get(metric, 1.0)
+            if direction == "lower" and c > med * (1 + mtol):
                 failures.append(
                     f"{name}{key}: {metric} = {c:.4g} above the "
                     f"last-{len(values)} window median {med:.4g} "
-                    f"(tolerance {tol:.0%})")
-            elif direction == "higher" and c < med * (1 - tol):
+                    f"(tolerance {mtol:.0%})")
+            elif direction == "higher" and c < med * (1 - mtol):
                 failures.append(
                     f"{name}{key}: {metric} = {c:.4g} below the "
                     f"last-{len(values)} window median {med:.4g} "
-                    f"(tolerance {tol:.0%})")
+                    f"(tolerance {mtol:.0%})")
     return failures
 
 

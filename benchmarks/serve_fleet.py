@@ -40,7 +40,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
+from concurrent.futures import ProcessPoolExecutor
 
 from repro.core.policy import MgmtPolicy
 from repro.core.provision import ProvisionService
@@ -162,9 +164,10 @@ def run_dedicated(streams, widths, *, policy: MgmtPolicy) -> dict:
 
 
 def run_consolidated(streams, widths, *, coordination: str,
-                     policy: MgmtPolicy) -> dict:
+                     policy: MgmtPolicy, event_skip: bool = True) -> dict:
     """The fleet: one pool sized at the fleet-wide weighted hourly decode
-    peak."""
+    peak. Event-skipping is on by default — pinned bit-identical to the
+    dense loop by the parity suite, so it changes wall clock only."""
     n = len(streams)
     policies = [tenant_policy(policy, w) for w in widths]
     # size the pool exactly as the registered scenario would: one source
@@ -173,7 +176,8 @@ def run_consolidated(streams, widths, *, coordination: str,
                                                    widths=widths)
     fleet = ServeFleet(streams, engine=EmulatedEngine(capacity),
                        coordination=coordination, policies=policies,
-                       widths=widths, name=f"fleet-{coordination}-n{n}")
+                       widths=widths, name=f"fleet-{coordination}-n{n}",
+                       event_skip=event_skip)
     t0 = time.perf_counter()
     fs = fleet.run()
     wall = time.perf_counter() - t0
@@ -191,10 +195,11 @@ def run_consolidated(streams, widths, *, coordination: str,
 
 
 def run_cell(streams, widths, *, mix: str, coordination: str,
-             policy: MgmtPolicy, dedicated: dict) -> dict:
+             policy: MgmtPolicy, dedicated: dict,
+             event_skip: bool = True) -> dict:
     n = len(streams)
     fleet = run_consolidated(streams, widths, coordination=coordination,
-                             policy=policy)
+                             policy=policy, event_skip=event_skip)
     row = {
         "n_tenants": n,
         "policy": coordination,
@@ -222,6 +227,9 @@ def run_cell(streams, widths, *, mix: str, coordination: str,
         "isolation_violations": fleet["isolation_violations"],
         "peak_pool_active": fleet["peak_pool_active"],
         "wall_s": fleet["wall_s"],
+        "workflows_per_sec": (fleet["workflows_completed"]
+                              / max(fleet["wall_s"], 1e-12)),
+        "dedicated_wall_s": dedicated["wall_s"],
     }
     # the acceptance gate: consolidation must pay off at fleet scale,
     # for the heterogeneous mixes exactly as for the homogeneous one
@@ -231,6 +239,29 @@ def run_cell(streams, widths, *, mix: str, coordination: str,
                  f"{row['billed_vs_dedicated']:.2f}x dedicated at N={n} "
                  f"mix={mix} under {coordination}")
     return row
+
+
+# hourly release windows: dynamic blocks live at least one billing
+# unit, so elastic growth does not thrash fresh lease-hours (§4.4(2))
+FLEET_POLICY = MgmtPolicy(initial=2, ratio=2.0, scan_interval=3.0,
+                          release_interval=3600.0)
+
+
+def run_matrix_cell(cell: tuple) -> list[dict]:
+    """One ``(mix, N)`` point of the sweep — a dedicated baseline plus
+    both coordination policies. Top-level (picklable) so ``--procs``
+    shards the matrix across a worker pool, exactly as
+    ``benchmarks/scale_curve.py`` shards providers; cells are
+    seed-deterministic, so sharding cannot change any number."""
+    mix_spec, n, workflows, seed, jobs_scale, period, event_skip = cell
+    mix = parse_mix(mix_spec)
+    streams, widths = tenant_streams(n, workflows, seed, jobs_scale,
+                                     period, mix=mix)
+    dedicated = run_dedicated(streams, widths, policy=FLEET_POLICY)
+    return [run_cell(streams, widths, mix=mix_spec,
+                     coordination=coordination, policy=FLEET_POLICY,
+                     dedicated=dedicated, event_skip=event_skip)
+            for coordination in ("first-come", "coordinated")]
 
 
 def main(argv=None) -> dict:
@@ -244,6 +275,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--mixes", nargs="+", default=["1", "1/2/4"],
                     help="width mixes to sweep (cycled across tenants); "
                          "'1' = the homogeneous PR 4 fleet")
+    ap.add_argument("--procs", type=int, default=None,
+                    help="process-pool width over (mix, N) cells "
+                         "(default: min(cells, cpu count))")
+    ap.add_argument("--no-event-skip", action="store_true",
+                    help="dense tick loop (the reference; results are "
+                         "bit-identical either way, only wall differs)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized sweep: fewer tenants, smaller mosaics")
     ap.add_argument("--out", default="BENCH_serve_fleet.json")
@@ -255,29 +292,24 @@ def main(argv=None) -> dict:
         args.jobs_scale = 0.04
         args.period = 3600.0
 
-    # hourly release windows: dynamic blocks live at least one billing
-    # unit, so elastic growth does not thrash fresh lease-hours (§4.4(2))
-    policy = MgmtPolicy(initial=2, ratio=2.0, scan_interval=3.0,
-                        release_interval=3600.0)
-    runs = []
-    for mix_spec in args.mixes:
-        mix = parse_mix(mix_spec)
-        for n in args.tenants:
-            streams, widths = tenant_streams(n, args.workflows, args.seed,
-                                             args.jobs_scale, args.period,
-                                             mix=mix)
-            dedicated = run_dedicated(streams, widths, policy=policy)
-            for coordination in ("first-come", "coordinated"):
-                runs.append(run_cell(streams, widths, mix=mix_spec,
-                                     coordination=coordination,
-                                     policy=policy, dedicated=dedicated))
+    policy = FLEET_POLICY
+    cells = [(mix_spec, n, args.workflows, args.seed, args.jobs_scale,
+              args.period, not args.no_event_skip)
+             for mix_spec in args.mixes for n in args.tenants]
+    procs = args.procs or min(len(cells), os.cpu_count() or 1)
+    if procs > 1:
+        with ProcessPoolExecutor(max_workers=procs) as pool:
+            per_cell = list(pool.map(run_matrix_cell, cells))
+    else:
+        per_cell = [run_matrix_cell(c) for c in cells]
+    runs = [row for rows in per_cell for row in rows]
 
     out = {
         "benchmark": "serve_fleet",
         "config": {"tenants": args.tenants, "workflows": args.workflows,
                    "jobs_scale": args.jobs_scale, "period_s": args.period,
                    "seed": args.seed, "smoke": args.smoke,
-                   "mixes": args.mixes,
+                   "mixes": args.mixes, "procs": procs,
                    "policy": {"initial": policy.initial,
                               "ratio": policy.ratio,
                               "release_interval": policy.release_interval}},

@@ -57,8 +57,61 @@ def contention_waves(slots: int, period: float) -> list[tuple[float, str, int]]:
             (0.75 * period, "neighbors", -(hold - hold // 2))]
 
 
+def timed_run(driver, profile: "Profiler | None" = None) -> tuple:
+    """``driver.run()`` under the wall clock (and optionally the
+    profiler); returns ``(stats, wall_s)``."""
+    t0 = time.perf_counter()
+    if profile is not None:
+        with profile:
+            stats = driver.run()
+    else:
+        stats = driver.run()
+    return stats, time.perf_counter() - t0
+
+
+def throughput_row(stats, mode: str, wall: float) -> dict:
+    """A ``ServeStats`` row extended with the trajectory metrics the
+    regression gate windows: wall clock and serving rate."""
+    out = stats.as_dict()
+    out["mode"] = mode
+    out["wall_s"] = wall
+    out["workflows_per_sec"] = (stats.workflows_completed / wall
+                                if wall > 0 else 0.0)
+    return out
+
+
+class Profiler:
+    """``--profile``: cProfile the serve run(s) and write the top-N
+    cumulative hot spots as a text table (CI uploads it as an artifact,
+    so tick-loop regressions are diagnosable from the run page)."""
+
+    def __init__(self, top: int, out_path: str):
+        import cProfile
+        self.top = top
+        self.out_path = out_path
+        self._prof = cProfile.Profile()
+
+    def __enter__(self):
+        self._prof.enable()
+        return self
+
+    def __exit__(self, *exc):
+        self._prof.disable()
+        return False
+
+    def write(self, header: str) -> None:
+        import io
+        import pstats
+        buf = io.StringIO()
+        stats = pstats.Stats(self._prof, stream=buf)
+        stats.sort_stats("cumulative").print_stats(self.top)
+        with open(self.out_path, "w") as fh:
+            fh.write(header + "\n" + buf.getvalue())
+        print(f"wrote {self.out_path} (top {self.top} hot spots)")
+
+
 def run_mode(stream, *, mode: str, slots: int, policy: MgmtPolicy,
-             contention=()) -> dict:
+             contention=(), profile: Profiler | None = None) -> dict:
     if mode == "dsp":
         provider = ResourceProvider(slots, coordination="first-come")
         driver = ServeDriver(stream, provider=provider,
@@ -68,17 +121,12 @@ def run_mode(stream, *, mode: str, slots: int, policy: MgmtPolicy,
         driver = ServeDriver(stream, provider=ProvisionService(),
                              engine=EmulatedEngine(slots),
                              fixed_nodes=slots)
-    t0 = time.perf_counter()
-    stats = driver.run()
-    wall = time.perf_counter() - t0
+    stats, wall = timed_run(driver, profile)
     # the acceptance gate: everything served, nothing over-admitted
     assert stats.workflows_completed == stats.workflows_expected, (
         mode, stats.workflows_completed, stats.workflows_expected)
     assert stats.over_admissions == 0, (mode, stats.over_admissions)
-    out = stats.as_dict()
-    out["mode"] = mode
-    out["wall_s"] = wall
-    return out
+    return throughput_row(stats, mode, wall)
 
 
 def run_real(n_workflows: int, seed: int) -> dict:
@@ -102,15 +150,92 @@ def run_real(n_workflows: int, seed: int) -> dict:
         stream, provider=provider, engine=JaxEngineAdapter(engine, seed=seed),
         policy=MgmtPolicy(initial=2, ratio=1.0, scan_interval=3.0,
                           release_interval=60.0))
-    t0 = time.perf_counter()
-    stats = driver.run()
-    wall = time.perf_counter() - t0
+    stats, wall = timed_run(driver)
     assert stats.workflows_completed == stats.workflows_expected
     assert stats.over_admissions == 0
-    out = stats.as_dict()
-    out["mode"] = "real-jax"
-    out["wall_s"] = wall
+    out = throughput_row(stats, "real-jax", wall)
     out["decode_steps"] = engine.steps
+    return out
+
+
+def _require(cond: bool, msg: str) -> None:
+    """Acceptance-gate check that survives ``python -O`` (unlike assert)."""
+    if not cond:
+        raise RuntimeError(f"serve_trace gate: {msg}")
+
+
+def run_scale(args, profile: Profiler | None = None) -> dict:
+    """The trace-scale leg (``--scale-smoke``): 10^5 generated Montage
+    workflows through the columnar driver (event-skipping on) AND the
+    dense scalar reference on the SAME workload — the ``ServeStats`` must
+    be bit-identical, and the columnar path must sustain a large
+    workflows/sec multiple (the wall-clock metrics feed the history
+    window, the hard floor here only catches collapses)."""
+    from repro.serve.columnar import ColumnarEngine, ColumnarServeDriver
+    from repro.sim.traces import montage_stream_columnar
+
+    policy = MgmtPolicy(initial=64, ratio=2.0, scan_interval=3.0,
+                        release_interval=300.0)
+    t0 = time.perf_counter()
+    cs = montage_stream_columnar(args.scale_workflows, n_project=2,
+                                 seed=args.seed, period=args.period)
+    generate_wall = time.perf_counter() - t0
+
+    provider = ResourceProvider(args.slots, coordination="first-come")
+    driver = ColumnarServeDriver(cs, provider=provider,
+                                 engine=ColumnarEngine(args.slots),
+                                 policy=policy, name="scale-serve")
+    col_stats, col_wall = timed_run(driver, profile)
+    _require(col_stats.workflows_completed == cs.n_entries,
+             f"columnar completed {col_stats.workflows_completed}"
+             f"/{cs.n_entries} workflows")
+    _require(col_stats.over_admissions == 0,
+             f"columnar over-admitted {col_stats.over_admissions}")
+    columnar = throughput_row(col_stats, "columnar", col_wall)
+
+    t0 = time.perf_counter()
+    stream = cs.to_jobs()
+    materialize_wall = time.perf_counter() - t0
+    provider = ResourceProvider(args.slots, coordination="first-come")
+    ref = ServeDriver(stream, provider=provider,
+                      engine=EmulatedEngine(args.slots), policy=policy,
+                      name="scale-serve", event_skip=False)
+    ref_stats, ref_wall = timed_run(ref)
+    scalar = throughput_row(ref_stats, "scalar", ref_wall)
+
+    # the tentpole contract: same workload, bit-identical serving record
+    mismatch = [k for k in col_stats.as_dict()
+                if col_stats.as_dict()[k] != ref_stats.as_dict()[k]]
+    _require(not mismatch,
+             f"columnar/scalar ServeStats diverge on {mismatch}")
+    columnar["stats_mismatches"] = len(mismatch)
+    speedup = (columnar["workflows_per_sec"]
+               / max(scalar["workflows_per_sec"], 1e-12))
+    _require(speedup >= 5.0,
+             f"columnar+event-skipping only {speedup:.1f}x the scalar "
+             f"reference (acceptance floor: 10x, hard floor: 5x)")
+
+    out = {
+        "benchmark": "serve_scale",
+        "config": {"workflows": args.scale_workflows, "tasks": cs.n_tasks,
+                   "n_project": 2, "period_s": args.period,
+                   "slots": args.slots, "seed": args.seed},
+        "runs": [columnar, scalar],
+        "speedup_vs_scalar": speedup,
+        "generate_wall_s": generate_wall,
+        "materialize_wall_s": materialize_wall,
+    }
+    with open(args.out, "w") as fh:
+        json.dump(out, fh, indent=2)
+    print(f"wrote {args.out} ({args.scale_workflows} workflows, "
+          f"{cs.n_tasks} tasks)")
+    for row in (columnar, scalar):
+        print(f"{row['mode']:>10s}: {row['workflows_per_sec']:10.0f} wf/s  "
+              f"wall {row['wall_s']:6.2f}s  ticks {row['ticks']:6d}  "
+              f"over-adm {row['over_admissions']}")
+    print(f"columnar vs scalar: {speedup:.1f}x workflows/sec, "
+          f"stats bit-identical "
+          f"(+{materialize_wall:.1f}s scalar stream materialization)")
     return out
 
 
@@ -123,10 +248,35 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: 500 workflows, smaller mosaics")
+    ap.add_argument("--scale-smoke", action="store_true",
+                    help="trace-scale leg: 10^5 generated workflows, "
+                         "columnar+event-skipping vs the dense scalar "
+                         "reference, bit-identical stats required "
+                         "(writes BENCH_serve_scale.json)")
+    ap.add_argument("--scale-workflows", type=int, default=100_000)
     ap.add_argument("--real", type=int, default=0, metavar="N",
                     help="also serve N workflows on the real jax engine")
-    ap.add_argument("--out", default="BENCH_serve_trace.json")
+    ap.add_argument("--profile", type=int, default=0, metavar="N",
+                    help="cProfile the serve run and write the top-N "
+                         "cumulative hot spots (CI artifact)")
+    ap.add_argument("--profile-out", default="BENCH_serve_profile.txt")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+    if args.out is None:
+        args.out = ("BENCH_serve_scale.json" if args.scale_smoke
+                    else "BENCH_serve_trace.json")
+
+    if args.scale_smoke:
+        args.period = 10_000.0
+        args.slots = 4096
+        profile = (Profiler(args.profile, args.profile_out)
+                   if args.profile else None)
+        out = run_scale(args, profile)
+        if profile is not None:
+            profile.write(
+                f"# cProfile of the columnar --scale-smoke serve run "
+                f"({args.scale_workflows} workflows)")
+        return out
 
     if args.smoke:
         args.workflows = 500
@@ -139,10 +289,16 @@ def main(argv=None) -> dict:
     n_tasks = sum(len(jobs) for _, jobs in stream)
     policy = MgmtPolicy(initial=16, ratio=1.2, scan_interval=3.0,
                         release_interval=300.0)
+    profile = (Profiler(args.profile, args.profile_out)
+               if args.profile else None)
     dedicated = run_mode(stream, mode="dedicated", slots=args.slots,
                          policy=policy)
     dsp = run_mode(stream, mode="dsp", slots=args.slots, policy=policy,
-                   contention=contention_waves(args.slots, args.period))
+                   contention=contention_waves(args.slots, args.period),
+                   profile=profile)
+    if profile is not None:
+        profile.write(f"# cProfile of the dsp serve run "
+                      f"({args.workflows} workflows, {n_tasks} tasks)")
     out = {
         "benchmark": "serve_trace",
         "config": {"workflows": args.workflows, "tasks": n_tasks,
@@ -170,7 +326,8 @@ def main(argv=None) -> dict:
               f"billed {row['node_hours']:8.0f} node-h  "
               f"deferred {row['deferred_grants']:4d}  "
               f"over-adm {row['over_admissions']}  "
-              f"wall {row['wall_s']:.1f}s")
+              f"wall {row['wall_s']:.1f}s "
+              f"({row['workflows_per_sec']:.0f} wf/s)")
     print(f"dsp vs dedicated: {out['utilization_gain']:.2f}x utilization at "
           f"{out['throughput_ratio']:.2f}x throughput, "
           f"{out['billed_ratio']:.2f}x billed node-hours")

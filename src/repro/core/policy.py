@@ -58,9 +58,14 @@ class PolicyEngine:
         self.dynamic_blocks: list[int] = []
 
     # ------------------------------------------------------------- scan
-    def scan_request(self, queued_demands: Sequence[int],
-                     owned: int) -> tuple[int, int]:
-        """(nodes to request, minimum useful grant) for the current queue.
+    def scan_request_stats(self, total: int, biggest: int, smallest: int,
+                           owned: int) -> tuple[int, int]:
+        """(nodes to request, minimum useful grant) from queue *summary
+        statistics* — total / biggest / smallest queued node demand. The
+        decision only ever reads these three aggregates, so a columnar
+        driver holding 10^5-10^6 queued tasks as arrays can negotiate
+        without materializing a per-job demand list (``repro.serve.
+        columnar`` keeps them as ``queue_len * width``).
 
         A grant is *useful* only if it can put at least one queued job on
         nodes; anything smaller sits idle until the hourly release check
@@ -71,17 +76,25 @@ class PolicyEngine:
         exists to fit one job wider than everything owned, so it is
         all-or-nothing.
         """
-        if not queued_demands:
+        if total <= 0:
             return 0, 0
-        demand = sum(queued_demands)
-        biggest = max(queued_demands)
-        ratio = demand / max(owned, 1)
-        if ratio > self.policy.ratio and demand > owned:
-            floor = max(1, min(queued_demands) - owned)
-            return demand - owned, floor     # DR1: divisible down to floor
+        ratio = total / max(owned, 1)
+        if ratio > self.policy.ratio and total > owned:
+            floor = max(1, smallest - owned)
+            return total - owned, floor      # DR1: divisible down to floor
         if biggest > owned:
             return biggest - owned, biggest - owned   # DR2: indivisible
         return 0, 0
+
+    def scan_request(self, queued_demands: Sequence[int],
+                     owned: int) -> tuple[int, int]:
+        """Per-job-list form of :meth:`scan_request_stats` (the historical
+        signature; both must stay decision-identical — pinned in tests)."""
+        if not queued_demands:
+            return 0, 0
+        return self.scan_request_stats(sum(queued_demands),
+                                       max(queued_demands),
+                                       min(queued_demands), owned)
 
     def scan(self, queued_demands: Sequence[int], owned: int) -> int:
         """Nodes to request right now (0 = no action).
@@ -90,14 +103,18 @@ class PolicyEngine:
         """
         return self.scan_request(queued_demands, owned)[0]
 
-    def urgency(self, queued_demands: Sequence[int], owned: int) -> float:
+    def urgency_stats(self, total: int, owned: int) -> float:
         """The §3.2.2.1 *ratio of obtaining resources* (queued demand over
         owned) as a cross-TRE arbitration priority: a coordinated provider
         (``repro.core.provider.CoordinatedPolicy``) serves the most
         oversubscribed tenant first when simultaneous requests contend."""
-        if not queued_demands:
+        if total <= 0:
             return 0.0
-        return sum(queued_demands) / max(owned, 1)
+        return total / max(owned, 1)
+
+    def urgency(self, queued_demands: Sequence[int], owned: int) -> float:
+        """Per-job-list form of :meth:`urgency_stats`."""
+        return self.urgency_stats(sum(queued_demands), owned)
 
     def granted(self, n: int) -> None:
         if n > 0:

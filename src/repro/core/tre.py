@@ -111,6 +111,9 @@ class RuntimeEnv:
         # ---- server state ----
         self.queue: list[Any] = []
         self.completed: list[Any] = []
+        self._completed_n = 0     # == len(completed) for the scalar path;
+        # a columnar driver tracks completions as array batches and bumps
+        # only this counter, so ``all_done`` must never read len(completed)
         self.busy = 0
         self.destroyed = False
         # idle accounting: explicit time-integral state (not lazy getattr —
@@ -158,7 +161,7 @@ class RuntimeEnv:
     @property
     def all_done(self) -> bool:
         return (self._expected is not None
-                and len(self.completed) == self._expected)
+                and self._completed_n == self._expected)
 
     def _account_idle(self) -> None:
         """Accumulate the time-integral of idle nodes. The release check
@@ -243,6 +246,7 @@ class RuntimeEnv:
         self.busy -= self._alloc.pop(id(task), task.nodes)
         self._reserved.pop(id(task), None)
         self.completed.append(task)
+        self._completed_n += 1
         jid = getattr(task, "jid", None)
         if jid is not None:
             for child in self._children.get(jid, ()):
@@ -256,16 +260,30 @@ class RuntimeEnv:
         return False
 
     # ------------------------------------------------------ DSP control
-    def _deficit(self, demands: list[int] | None = None) -> tuple[int, int]:
+    def _queue_demand_stats(self) -> tuple[int, int, int]:
+        """(total, biggest, smallest) node demand of the queue — the only
+        aggregates the policy engine's scan decision reads. The batch hook
+        a columnar driver overrides: its queue is an index array of
+        uniform-width tasks, so the stats are ``(len * width, width,
+        width)`` with no per-job list ever materialized."""
+        if not self.queue:
+            return 0, 0, 0
+        demands = [t.nodes for t in self.queue]
+        return sum(demands), max(demands), min(demands)
+
+    def _deficit(self, stats: tuple[int, int, int] | None = None,
+                 ) -> tuple[int, int]:
         """(current DR1/DR2 need, minimum useful grant) per the policy
         engine, capped by the driver's node ceiling. When the ceiling cuts
         the need below its useful floor (e.g. a DR2 for a job wider than
         the driver will ever own), the request is suppressed entirely —
         nodes granted below the floor could never run the job and would
         idle-thrash through the hourly release checks."""
-        if demands is None:
-            demands = [t.nodes for t in self.queue]
-        need, min_useful = self.engine.scan_request(demands, self.owned)
+        if stats is None:
+            stats = self._queue_demand_stats()
+        total, biggest, smallest = stats
+        need, min_useful = self.engine.scan_request_stats(
+            total, biggest, smallest, self.owned)
         if need > 0 and self.max_nodes is not None:
             need = min(need, self.max_nodes - self.owned)
         if need < min_useful:
@@ -308,11 +326,11 @@ class RuntimeEnv:
         self._in_scan = True
         try:
             if self.engine is not None:
-                demands = [task.nodes for task in self.queue]
-                need, min_useful = self._deficit(demands)
+                stats = self._queue_demand_stats()
+                need, min_useful = self._deficit(stats)
                 t = self.clock.now()
                 pending = self._pending_req
-                urgency = self.engine.urgency(demands, self.owned)
+                urgency = self.engine.urgency_stats(stats[0], self.owned)
                 if pending is not None and pending.status == "queued":
                     # refresh the parked request with the live deficit and
                     # urgency; the amend may complete it immediately (a

@@ -5,6 +5,9 @@ re-exported lazily so that importing the driver/fleet layers — which the
 system registry does to register ``dawningcloud-serve-fleet`` — never
 pulls jax into emulator-only processes (e.g. the scale-curve bench's
 worker pool)."""
+from repro.serve.columnar import (  # noqa: F401
+    ColumnarEngine, ColumnarEnv, ColumnarServeDriver,
+)
 from repro.serve.driver import (  # noqa: F401
     EmulatedEngine, JaxEngineAdapter, ServeDriver, ServeInvariantError,
     ServeStats,

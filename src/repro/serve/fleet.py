@@ -60,7 +60,8 @@ from repro.core.tre import TickClock
 from repro.core.types import Job
 from repro.serve.driver import (
     EmulatedEngine, ServeDriver, ServeInvariantError, ServeStats,
-    default_max_ticks, engine_service_ticks, replay_contention,
+    default_max_ticks, due_tick_floor, engine_service_ticks,
+    replay_contention,
 )
 
 
@@ -100,6 +101,13 @@ class TenantSlice:
 
     def step(self) -> list[int]:
         return self._pool.take_finished(self.tenant)
+
+    def next_finish_in(self):
+        """Pool-wide finish horizon (not per-tenant): another tenant's
+        finish frees shared slots, so a lane's quiet span must end there
+        too — conservative is correct for event-skipping."""
+        fn = getattr(self._pool.backing, "next_finish_in", None)
+        return fn() if fn is not None else None
 
 
 class PartitionedEngine:
@@ -351,7 +359,8 @@ class ServeFleet:
                  contention: Sequence[tuple[float, str, int]] = (),
                  scheduler=None, max_ticks: int | None = None,
                  strict: bool = True, name: str = "serve-fleet",
-                 widths: Sequence[int] | None = None):
+                 widths: Sequence[int] | None = None,
+                 event_skip: bool = False):
         if not tenant_streams:
             raise ValueError("a fleet needs at least one tenant stream")
         n = len(tenant_streams)
@@ -416,6 +425,11 @@ class ServeFleet:
             merged = [ev for s in tenant_streams for ev in s]
             max_ticks = default_max_ticks(merged, engine, tick_s)
         self.max_ticks = max_ticks
+        # fleet-level event-skipping: a tick is quiet only if it is quiet
+        # for EVERY lane (and the shared pool can jump its countdowns)
+        self.event_skip = bool(event_skip) and callable(
+            getattr(engine, "next_finish_in", None)) and callable(
+            getattr(engine, "advance_quiet", None))
         self.stats = FleetStats(
             name=name, n_tenants=n, capacity=engine.capacity,
             coordination=getattr(provider.policy, "name", "?"),
@@ -461,11 +475,46 @@ class ServeFleet:
             lane.finalize(k)
             self._live.remove(lane)
 
+    # ---------------------------------------------------- event-skipping
+    def next_event_tick(self, k: int) -> int:
+        """Earliest tick after ``k`` at which ANY lane could act — the
+        fleet-wide quiet span is the min over the lanes' horizons (each
+        lane's already folds in the shared pool's next finish through
+        ``TenantSlice.next_finish_in``, so one tenant's finish ends every
+        lane's quiet span: the freed slots are shared). The fleet-level
+        contention stream is a separate candidate — it replays against
+        the shared provider outside any lane."""
+        cands = [lane.next_event_tick(k) for lane in self._live]
+        if self._cont_i < len(self._contention):
+            cands.append(due_tick_floor(self._contention[self._cont_i][0],
+                                        self.tick_s))
+        if not cands:
+            return self.max_ticks
+        return max(min(cands), k + 1)
+
+    def _skip_quiet(self, dq: int) -> None:
+        """Advance ``dq`` fleet-quiet ticks in closed form: ONE pool-wide
+        countdown jump plus each live lane's stats integrals — the exact
+        batch of what ``dq`` dense fleet ticks would have done (the pool
+        refuses to jump past a finish)."""
+        if self.pool.backing.active_count:
+            self.pool.backing.advance_quiet(dq)
+        for lane in self._live:
+            lane.stats.busy_node_ticks += lane.env.busy * lane.tick_s * dq
+            lane.stats.owned_node_ticks += lane.env.owned * lane.tick_s * dq
+        self.clock.advance(self.tick_s * dq)
+
     # --------------------------------------------------------------- run
     def run(self) -> FleetStats:
         k = 0
         self._tick(k)
         while self._live and k < self.max_ticks:
+            if self.event_skip:
+                kn = min(self.next_event_tick(k), self.max_ticks)
+                dq = kn - k - 1
+                if dq > 0:
+                    self._skip_quiet(dq)
+                    k += dq
             k += 1
             self.clock.advance(self.tick_s)
             self._tick(k)

@@ -404,3 +404,208 @@ SERVE_PROFILES: dict[int, ServeProfile] = {
     4: ServeProfile(width=4, seconds_per_token=0.25,
                     prompt_lens=(8, 12, 16)),
 }
+
+
+# --------------------------------------------------------------------------
+# columnar stream materialization (10^5-10^6 workflows in NumPy arrays)
+# --------------------------------------------------------------------------
+@dataclass
+class ColumnarStream:
+    """A workflow arrival stream as preallocated NumPy columns — the
+    native input of ``repro.serve.columnar.ColumnarServeDriver``, which a
+    million-workflow run cannot afford to hold as per-task ``Job``
+    objects (~1 KB each).
+
+    Task axis: *emission position* — entry-major, tasks of entry ``e``
+    occupy positions ``entry_ptr[e]:entry_ptr[e+1]`` in their scalar
+    submit order. Dependencies are position-indexed CSR
+    (``dep_idx[dep_ptr[i]:dep_ptr[i+1]]``), so jids stay free to be any
+    globally-unique ints (the parity traces' are non-contiguous).
+    ``to_jobs()`` materializes the exact scalar stream, which is how the
+    bit-parity suite feeds both paths one identical workload."""
+
+    entry_arrival: np.ndarray       # float64[n_entries], ascending
+    entry_wid: np.ndarray           # int64[n_entries]
+    entry_ptr: np.ndarray           # int64[n_entries + 1] CSR into tasks
+    jid: np.ndarray                 # int64[n_tasks], globally unique
+    runtime: np.ndarray             # float64[n_tasks]
+    nodes: np.ndarray               # int64[n_tasks]
+    prompt_len: np.ndarray          # int64[n_tasks]
+    decode_len: np.ndarray          # int64[n_tasks]
+    dep_ptr: np.ndarray             # int64[n_tasks + 1]
+    dep_idx: np.ndarray             # int64[nnz], task positions
+    names: list | None = None       # per-task, synthesized when absent
+
+    @property
+    def n_entries(self) -> int:
+        return len(self.entry_arrival)
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.jid)
+
+    def name_of(self, i: int) -> str:
+        if self.names is not None:
+            return self.names[i]
+        e = int(np.searchsorted(self.entry_ptr, i, side="right")) - 1
+        return f"wf{int(self.entry_wid[e])}/t{i - int(self.entry_ptr[e])}"
+
+    @staticmethod
+    def from_jobs(stream) -> "ColumnarStream":
+        """Columnarize a scalar ``[(arrival_t, jobs), ...]`` stream (jids
+        may be arbitrary unique ints; deps are remapped to positions)."""
+        entries = sorted(stream, key=lambda e: e[0])
+        entries = [(t, jobs) for t, jobs in entries if jobs]
+        pos = {}
+        for _, jobs in entries:
+            for j in jobs:
+                if j.jid in pos:
+                    raise ValueError(f"duplicate jid {j.jid} in stream")
+                pos[j.jid] = len(pos)
+        n = len(pos)
+        arr = np.array([t for t, _ in entries], float)
+        wid = np.zeros(len(entries), np.int64)
+        eptr = np.zeros(len(entries) + 1, np.int64)
+        jid = np.zeros(n, np.int64)
+        runtime = np.zeros(n, float)
+        nodes = np.zeros(n, np.int64)
+        plen = np.zeros(n, np.int64)
+        dlen = np.zeros(n, np.int64)
+        dep_ptr = np.zeros(n + 1, np.int64)
+        dep_idx: list[int] = []
+        names: list[str] = []
+        i = 0
+        for e, (_, jobs) in enumerate(entries):
+            wid[e] = jobs[0].wid
+            for j in jobs:
+                jid[i] = j.jid
+                runtime[i] = j.runtime
+                nodes[i] = j.nodes
+                plen[i] = j.prompt_len
+                dlen[i] = j.decode_len
+                dep_idx.extend(pos[d] for d in j.deps)
+                dep_ptr[i + 1] = len(dep_idx)
+                names.append(j.name)
+                i += 1
+            eptr[e + 1] = i
+        return ColumnarStream(
+            entry_arrival=arr, entry_wid=wid, entry_ptr=eptr, jid=jid,
+            runtime=runtime, nodes=nodes, prompt_len=plen, decode_len=dlen,
+            dep_ptr=dep_ptr, dep_idx=np.array(dep_idx, np.int64),
+            names=names)
+
+    def to_jobs(self):
+        """Materialize the exact scalar stream: ``[(arrival_t, [Job])]``
+        with deps as jids — what ``ServeDriver`` replays, so scalar-vs-
+        columnar runs consume one identical workload by construction."""
+        out = []
+        for e in range(self.n_entries):
+            lo, hi = int(self.entry_ptr[e]), int(self.entry_ptr[e + 1])
+            jobs = [Job(
+                jid=int(self.jid[i]), arrival=float(self.entry_arrival[e]),
+                runtime=float(self.runtime[i]), nodes=int(self.nodes[i]),
+                deps=tuple(int(self.jid[d]) for d in
+                           self.dep_idx[self.dep_ptr[i]:self.dep_ptr[i + 1]]),
+                wid=int(self.entry_wid[e]), name=self.name_of(i),
+                prompt_len=int(self.prompt_len[i]),
+                decode_len=int(self.decode_len[i]))
+                for i in range(lo, hi)]
+            out.append((float(self.entry_arrival[e]), jobs))
+        return out
+
+
+def _montage_template(n_project: int):
+    """The 9-stage mosaic DAG shape at width ``n_project``: per-task stage
+    names, fixed runtimes for the serial stages (NaN = lognormal draw for
+    the parallel ones), and position-indexed deps. One template, tiled
+    across every workflow of a columnar stream."""
+    names: list[str] = []
+    fixed: list[float] = []
+    deps: list[tuple[int, ...]] = []
+
+    def add(name, runtime, dd):
+        names.append(name)
+        fixed.append(runtime)
+        deps.append(tuple(dd))
+        return len(names) - 1
+
+    n_diff = 4 * n_project - 2
+    project = [add(f"mProjectPP-{i}", np.nan, []) for i in range(n_project)]
+    diff = []
+    for i in range(n_diff):
+        a = project[i % n_project]
+        b = project[(i + 1 + i // n_project) % n_project]
+        diff.append(add(f"mDiffFit-{i}", np.nan, [a] if a == b else [a, b]))
+    concat = add("mConcatFit", 110.0, diff)
+    bgmodel = add("mBgModel", 125.0, [concat])
+    background = [add(f"mBackground-{i}", np.nan, [bgmodel, project[i]])
+                  for i in range(n_project)]
+    imgtbl = add("mImgtbl", 35.0, background)
+    madd = add("mAdd", 45.0, [imgtbl])
+    shrink = add("mShrink", 20.0, [madd])
+    add("mJPEG", 15.0, [shrink])
+    _check_montage_graph(len(names), n_project)
+    return names, np.array(fixed, float), deps
+
+
+def montage_stream_columnar(n_workflows: int, *, n_project: int = 8,
+                            seed: int = 0, period: float = 3600.0,
+                            width: int = 1,
+                            seconds_per_token: float = 1.0,
+                            prompt_lens: tuple[int, ...] = (4, 6, 8),
+                            mean_runtime: float = 11.38) -> ColumnarStream:
+    """``n_workflows`` Montage-shaped workflows as one columnar stream,
+    generated in a handful of whole-array RNG passes — the 10^5-10^6
+    workflow scale where looping :func:`montage_like` +
+    :func:`request_stream` per workflow costs more than the run itself.
+
+    Workflows share the ``n_project`` mosaic DAG shape but draw their own
+    parallel-task runtimes and prompt lengths; each workflow's mean task
+    runtime is calibrated to ``mean_runtime`` exactly like
+    :func:`montage_like`. Arrivals are the same seeded Poisson process as
+    :func:`request_stream` (workflow 0 at t=0). jids are dense
+    ``0..n_tasks-1``, ``wid`` = workflow index."""
+    if n_workflows < 1:
+        raise ValueError(f"need n_workflows >= 1, got {n_workflows}")
+    if width < 1:
+        raise ValueError(f"width must be >= 1, got {width}")
+    rng = np.random.default_rng((seed << 8) ^ 0x5E12E)
+    names_t, fixed, deps_t = _montage_template(n_project)
+    m = len(names_t)                      # tasks per workflow
+    par = np.isnan(fixed)                 # parallel stages draw lognormal
+    # runtimes: one (workflows x parallel-tasks) lognormal pass, serial
+    # stages fixed, then per-workflow mean calibration (rows independent)
+    rt = np.broadcast_to(fixed, (n_workflows, m)).copy()
+    rt[:, par] = rng.lognormal(np.log(11.0), 0.12,
+                               (n_workflows, int(par.sum())))
+    rt = np.maximum(rt, 0.5)
+    rt *= (mean_runtime / rt.mean(axis=1))[:, None]
+    # token marks: prompt lens from the profile's discrete set, decode
+    # budget reproducing the trace runtime at the decode rate
+    plen = rng.choice(np.asarray(prompt_lens, np.int64), (n_workflows, m))
+    dlen = np.maximum(np.round(rt / seconds_per_token), 1).astype(np.int64)
+    # Poisson workflow arrivals over [0, period), workflow 0 at t=0
+    gaps = rng.exponential(period / n_workflows, n_workflows)
+    arrivals = np.concatenate([[0.0], np.cumsum(gaps)[:-1]])
+    arrivals = np.minimum(arrivals, period - 1.0)
+    # deps: the template CSR tiled with a per-workflow position offset
+    dcount = np.array([len(d) for d in deps_t], np.int64)
+    dflat = np.array([p for d in deps_t for p in d], np.int64)
+    dep_ptr = np.concatenate(
+        [[0], np.cumsum(np.tile(dcount, n_workflows))])
+    dep_idx = (np.tile(dflat, n_workflows)
+               + np.repeat(np.arange(n_workflows, dtype=np.int64) * m,
+                           len(dflat)))
+    n = n_workflows * m
+    return ColumnarStream(
+        entry_arrival=arrivals,
+        entry_wid=np.arange(n_workflows, dtype=np.int64),
+        entry_ptr=np.arange(n_workflows + 1, dtype=np.int64) * m,
+        jid=np.arange(n, dtype=np.int64),
+        runtime=rt.reshape(-1),
+        nodes=np.full(n, width, np.int64),
+        prompt_len=plen.reshape(-1).astype(np.int64),
+        decode_len=dlen.reshape(-1),
+        dep_ptr=dep_ptr.astype(np.int64),
+        dep_idx=dep_idx.astype(np.int64),
+        names=None)

@@ -357,6 +357,88 @@ def test_baseline_fingerprint_survives_line_moves(tmp_path):
 
 
 # =====================================================================
+# --fix: mechanical DC101 rewrite
+# =====================================================================
+_FIX_FIXTURE = """\
+def grow(free, busy, extra):
+    assert extra <= free, (extra, free)
+    return busy + extra
+
+def check(flag, items):
+    assert not flag
+    assert items, "no items queued"
+    return len(items)
+"""
+
+
+def test_fix_rewrites_asserts_and_relints_clean(tmp_path):
+    p = tmp_path / "src/repro/core/x.py"
+    p.parent.mkdir(parents=True)
+    p.write_text(_FIX_FIXTURE)
+    bl = tmp_path / "baseline.json"
+    argv = ["src", "--root", str(tmp_path), "--baseline", str(bl)]
+    assert dclint_main(argv) == 1
+    assert dclint_main(argv + ["--fix"]) == 0
+    fixed = p.read_text()
+    assert "assert" not in fixed
+    assert lint_file(p, root=tmp_path) == []
+    assert dclint_main(argv) == 0          # idempotent: stays clean
+
+    # the rewrite preserves runtime behavior — and survives python -O
+    # semantics, since the guards are plain if/raise
+    ns: dict = {}
+    exec(compile(fixed, str(p), "exec"), ns)
+    assert ns["grow"](free=8, busy=2, extra=3) == 5
+    with pytest.raises(RuntimeError, match=r"extra <= free.*9.*8"):
+        ns["grow"](free=8, busy=2, extra=9)
+    assert ns["check"](False, [1, 2]) == 2
+    with pytest.raises(RuntimeError, match="invariant violated: not flag"):
+        ns["check"](True, [1])
+    with pytest.raises(RuntimeError, match="no items queued"):
+        ns["check"](False, [])
+
+
+def test_fix_burns_down_baseline(tmp_path):
+    p = tmp_path / "src/repro/core/x.py"
+    p.parent.mkdir(parents=True)
+    p.write_text(_FIX_FIXTURE)
+    bl = tmp_path / "baseline.json"
+    baseline_mod.write(bl, _violations_of(tmp_path))
+    assert len(baseline_mod.load(bl)["entries"]) == 3
+
+    argv = ["src", "--root", str(tmp_path), "--baseline", str(bl), "--fix"]
+    assert dclint_main(argv) == 0
+    # every rewritten finding became stale and was pruned — the debt is paid
+    assert baseline_mod.load(bl)["entries"] == []
+
+
+def test_fix_skips_non_statement_initial_assert(tmp_path):
+    p = tmp_path / "src/repro/core/x.py"
+    p.parent.mkdir(parents=True)
+    p.write_text("def f(x, y):\n"
+                 "    if x: assert y\n"
+                 "    return y\n")
+    from tools.dclint.fix import fix_file
+    assert fix_file(p, root=tmp_path) == (0, 1)
+    assert "assert y" in p.read_text()     # left for a human
+    assert codes(lint_file(p, root=tmp_path)) == ["DC101"]
+
+
+def test_fix_honors_pragmas_and_scope(tmp_path):
+    # pragma-suppressed and out-of-scope asserts are not touched
+    sup = tmp_path / "src/repro/core/sup.py"
+    sup.parent.mkdir(parents=True)
+    sup.write_text("def f(x):\n    assert x  # dclint: disable=DC101\n")
+    out = tmp_path / "src/repro/kernels/k.py"
+    out.parent.mkdir(parents=True)
+    out.write_text("def f(n):\n    assert n > 0\n")
+    from tools.dclint.fix import fix_paths
+    assert fix_paths([tmp_path / "src"], root=tmp_path) == (0, 0)
+    assert "assert x" in sup.read_text()
+    assert "assert n > 0" in out.read_text()
+
+
+# =====================================================================
 # CLI + JSON schema
 # =====================================================================
 def _cli_fixture(tmp_path: Path) -> Path:

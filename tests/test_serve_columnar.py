@@ -1,0 +1,424 @@
+"""Columnar serve tick + event-skipping: the trace-scale path's parity
+contract (tests/README.md).
+
+``ColumnarServeDriver`` over a ``ColumnarStream`` and the scalar
+``ServeDriver`` over ``to_jobs()`` of the SAME stream are two drivers of
+one workload; they must produce a bit-identical ``ServeStats``, identical
+per-task start/finish times and identical lease-adjustment events — under
+DSP contention, dedicated mode, widths > 1 and engine ``max_len`` caps.
+Event-skipping (scalar, columnar and fleet) must be invisible: a skipped
+run is bit-identical to the dense run, and no skip window may contain an
+arrival, a contention/deferred-grant instant, or a release boundary
+(the hypothesis property at the bottom checks the windows directly).
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from tests.conftest import given, settings, st
+from tests.test_serve_driver import (
+    PARITY_CAPACITY, PARITY_CONTENTION, PARITY_POLICY, PARITY_W1, PARITY_W2,
+    _dag_from_spec, montage_mini,
+)
+
+from repro.core.policy import MgmtPolicy
+from repro.core.provider import ResourceProvider
+from repro.core.provision import ProvisionService
+from repro.serve.columnar import (
+    ColumnarEngine, ColumnarServeDriver, default_max_ticks_columnar,
+)
+from repro.serve.driver import (
+    EmulatedEngine, ServeDriver, ServeInvariantError, default_max_ticks,
+    due_tick_floor, next_boundary, service_ticks_batch,
+)
+from repro.serve.fleet import ServeFleet
+from repro.sim.traces import ColumnarStream, montage_stream_columnar
+
+
+# ---------------------------------------------------------------- helpers
+def parity_stream(width: int = 1):
+    """The PR 3 parity trace (two Montage-mini workflows, non-contiguous
+    jids), re-denominated at ``width`` node units per task."""
+    w1 = [replace(j.fresh(), nodes=width) for j in PARITY_W1]
+    w2 = [replace(j.fresh(), nodes=width) for j in PARITY_W2]
+    return [(0.0, w1), (31.0, w2)]
+
+
+def run_scalar(stream, *, capacity, policy=None, fixed_nodes=None,
+               contention=(), slot_width=1, max_len=None, event_skip=False):
+    prov = (ResourceProvider(capacity * slot_width,
+                             coordination="first-come")
+            if policy is not None else ProvisionService())
+    drv = ServeDriver(stream, provider=prov,
+                      engine=EmulatedEngine(capacity, max_len=max_len),
+                      policy=policy, fixed_nodes=fixed_nodes,
+                      name="parity-serve", contention=contention,
+                      slot_width=slot_width, event_skip=event_skip)
+    stats = drv.run()
+    events = [(e.t, e.tre, e.delta) for e in prov.adjust_events] \
+        if policy is not None else []
+    times = {j.name: (j.start, j.finish)
+             for _, jobs in stream for j in jobs}
+    return stats.as_dict(), events, times
+
+
+def run_columnar(cs, *, capacity, policy=None, fixed_nodes=None,
+                 contention=(), slot_width=1, max_len=None, event_skip=True):
+    prov = (ResourceProvider(capacity * slot_width,
+                             coordination="first-come")
+            if policy is not None else ProvisionService())
+    drv = ColumnarServeDriver(
+        cs, provider=prov,
+        engine=ColumnarEngine(capacity, max_len=max_len),
+        policy=policy, fixed_nodes=fixed_nodes, name="parity-serve",
+        contention=contention, slot_width=slot_width, event_skip=event_skip)
+    stats = drv.run()
+    events = [(e.t, e.tre, e.delta) for e in prov.adjust_events] \
+        if policy is not None else []
+    times = {cs.name_of(i): (float(drv.env.start_t[i]),
+                             float(drv.env.finish_t[i]))
+             for i in range(cs.n_tasks)}
+    return stats.as_dict(), events, times
+
+
+def assert_parity(scalar, columnar):
+    s_stats, s_events, s_times = scalar
+    c_stats, c_events, c_times = columnar
+    assert s_stats == c_stats
+    assert s_events == c_events
+    assert s_times == c_times
+
+
+# ------------------------------------------------------- bit-parity pins
+def test_columnar_parity_dsp_contention():
+    """The PR 3 parity trace under DSP negotiation + scripted co-tenant
+    contention: deferred grants, parked requests, a late release — the
+    columnar tick must match the scalar reference bit for bit, with
+    event-skipping on AND off."""
+    kw = dict(capacity=PARITY_CAPACITY, policy=PARITY_POLICY,
+              contention=PARITY_CONTENTION)
+    ref = run_scalar(parity_stream(), **kw)
+    cs = ColumnarStream.from_jobs(parity_stream())
+    assert_parity(ref, run_columnar(cs, event_skip=True, **kw))
+    assert_parity(ref, run_columnar(cs, event_skip=False, **kw))
+    # the scenario really exercised the negotiation paths
+    assert ref[0]["deferred_grants"] == 1 and ref[0]["workflows_completed"] == 2
+
+
+def test_columnar_parity_dedicated():
+    """fixed_nodes (dedicated baseline) mode: the columnar env must
+    dispatch on submission like the scalar ``submit`` does."""
+    kw = dict(capacity=6, fixed_nodes=6)
+    ref = run_scalar(parity_stream(), **kw)
+    cs = ColumnarStream.from_jobs(parity_stream())
+    assert_parity(ref, run_columnar(cs, **kw))
+    assert ref[0]["workflows_completed"] == 2
+    assert ref[0]["deferred_grants"] == 0
+
+
+def test_columnar_parity_width2():
+    """slot_width=2 in both modes: unit-denominated grants and busy
+    integrals survive the columnar rewrite."""
+    for kw in (dict(capacity=PARITY_CAPACITY, slot_width=2,
+                    policy=MgmtPolicy(initial=2, ratio=1.0,
+                                      scan_interval=3.0,
+                                      release_interval=60.0)),
+               dict(capacity=6, slot_width=2, fixed_nodes=12)):
+        ref = run_scalar(parity_stream(width=2), **kw)
+        cs = ColumnarStream.from_jobs(parity_stream(width=2))
+        assert_parity(ref, run_columnar(cs, **kw))
+        assert ref[0]["workflows_completed"] == 2
+
+
+def test_columnar_parity_max_len():
+    """An engine ``max_len`` that really caps some decode budgets: the
+    batched service-tick precompute must cap identically."""
+    stream = parity_stream()
+    for _, jobs in stream:
+        for j in jobs:
+            j.decode_len = max(j.decode_len, 40)   # make the cap bind
+            j.prompt_len = 8
+    kw = dict(capacity=PARITY_CAPACITY, policy=PARITY_POLICY,
+              contention=PARITY_CONTENTION, max_len=44)
+    ref = run_scalar(stream, **kw)
+    cs = ColumnarStream.from_jobs(stream)
+    assert np.any(cs.decode_len + cs.prompt_len > 44)
+    assert_parity(ref, run_columnar(cs, **kw))
+
+
+def test_columnar_requires_fcfs_uniform_width_and_batch_engine():
+    cs = ColumnarStream.from_jobs(parity_stream())
+    prov = ProvisionService()
+    with pytest.raises(TypeError, match="position-batch engine"):
+        ColumnarServeDriver(cs, provider=prov, engine=EmulatedEngine(4),
+                            fixed_nodes=4)
+    with pytest.raises(ValueError, match="FCFS"):
+        ColumnarServeDriver(cs, provider=prov, engine=ColumnarEngine(4),
+                            fixed_nodes=4, scheduler="backfill")
+    with pytest.raises(ServeInvariantError, match="batching slot"):
+        ColumnarServeDriver(cs, provider=prov, engine=ColumnarEngine(4),
+                            fixed_nodes=8, slot_width=2)
+
+
+# ----------------------------------------------- stream columnarization
+def test_columnar_stream_roundtrip():
+    """from_jobs ∘ to_jobs is the identity on the parity trace (jids,
+    deps, marks, names, arrival grouping)."""
+    ref = parity_stream()
+    back = ColumnarStream.from_jobs(ref).to_jobs()
+    key = lambda s: [(t, [(j.jid, j.runtime, j.nodes, j.prompt_len,
+                           j.decode_len, tuple(j.deps), j.wid, j.name)
+                          for j in jobs]) for t, jobs in s]
+    assert key(back) == key(ref)
+
+
+def test_montage_stream_columnar_structure():
+    cs = montage_stream_columnar(50, n_project=3, seed=7, period=500.0)
+    m = 6 * 3 + 4                                  # tasks per workflow
+    assert cs.n_entries == 50 and cs.n_tasks == 50 * m
+    assert cs.entry_arrival[0] == 0.0
+    assert np.all(np.diff(cs.entry_arrival) >= 0)
+    assert cs.entry_arrival[-1] <= 500.0 - 1.0
+    # deps stay inside their workflow's position block
+    for e in range(cs.n_entries):
+        lo, hi = cs.entry_ptr[e], cs.entry_ptr[e + 1]
+        deps = cs.dep_idx[cs.dep_ptr[lo]:cs.dep_ptr[hi]]
+        assert np.all((deps >= lo) & (deps < hi))
+    # dependency-free roots per workflow = the n_project mProjectPP stage
+    roots = (np.diff(cs.dep_ptr) == 0)
+    assert roots.reshape(50, m).sum(axis=1).tolist() == [3] * 50
+    # per-workflow mean runtime calibration (montage_like's contract)
+    rt = cs.runtime.reshape(50, m)
+    assert np.allclose(rt.mean(axis=1), 11.38)
+    # deterministic per seed
+    again = montage_stream_columnar(50, n_project=3, seed=7, period=500.0)
+    assert np.array_equal(cs.runtime, again.runtime)
+    assert np.array_equal(cs.entry_arrival, again.entry_arrival)
+
+
+def test_montage_stream_columnar_serves_end_to_end():
+    """A generated columnar stream completes through the columnar driver
+    under DSP negotiation, with zero over-admissions."""
+    cs = montage_stream_columnar(40, n_project=2, seed=3, period=400.0)
+    prov = ResourceProvider(64, coordination="first-come")
+    drv = ColumnarServeDriver(
+        cs, provider=prov, engine=ColumnarEngine(64),
+        policy=MgmtPolicy(initial=4, ratio=2.0, scan_interval=3.0,
+                          release_interval=300.0))
+    stats = drv.run()
+    assert stats.workflows_completed == 40
+    assert stats.tasks_completed == cs.n_tasks
+    assert stats.over_admissions == 0
+    assert prov.total_allocated == 0
+
+
+# ------------------------------------------------ batched service ticks
+def test_service_ticks_batch_matches_engine_scalar():
+    """Elementwise equality with ``EmulatedEngine.service_ticks`` across
+    the decode/prompt grid, with and without a binding ``max_len``."""
+    from repro.core.types import Job
+    dlen, plen, rt = [], [], []
+    for d in (0, 1, 2, 5, 40, 60):
+        for p in (4, 6, 8):
+            for r in (0.0, 0.4, 1.0, 7.3):
+                dlen.append(d), plen.append(p), rt.append(r)
+    dlen, plen, rt = (np.array(dlen, np.int64), np.array(plen, np.int64),
+                      np.array(rt, float))
+    for max_len in (None, 44):
+        eng = EmulatedEngine(4, max_len=max_len)
+        want = [eng.service_ticks(Job(jid=i, arrival=0.0, runtime=rt[i],
+                                      nodes=1, prompt_len=int(plen[i]),
+                                      decode_len=int(dlen[i])))
+                for i in range(len(dlen))]
+        got = service_ticks_batch(dlen, plen, rt, tick_s=1.0,
+                                  max_len=max_len)
+        assert got.tolist() == want
+
+
+# ----------------------------------------------------- tick-bound pins
+def test_default_max_ticks_single_pass_pinned():
+    """The satellite regression pin: the single-pass fold returns the
+    bound the original two-pass walk did (span and work folded in one
+    loop must not change the float expression), and the columnar bound
+    equals the scalar bound on the same workload."""
+    stream = parity_stream()
+    engine = EmulatedEngine(PARITY_CAPACITY)
+    # the reference two-pass computation, inlined
+    span = max(t for t, _ in stream)
+    work = sum(engine.service_ticks(j) for _, jobs in stream for j in jobs)
+    assert default_max_ticks(stream, engine, 1.0) \
+        == int(span / 1.0 + 8 * work + 36_000)
+    # unsorted streams still fold the true span (ServeFleet merges
+    # tenants' events unsorted)
+    assert default_max_ticks(list(reversed(stream)), engine, 1.0) \
+        == default_max_ticks(stream, engine, 1.0)
+
+    cs = ColumnarStream.from_jobs(stream)
+    svc = service_ticks_batch(cs.decode_len, cs.prompt_len, cs.runtime,
+                              tick_s=1.0, max_len=None)
+    assert default_max_ticks_columnar(cs, svc, 1.0) \
+        == default_max_ticks(stream, engine, 1.0)
+
+    gen = montage_stream_columnar(20, n_project=2, seed=1, period=200.0)
+    gsvc = service_ticks_batch(gen.decode_len, gen.prompt_len, gen.runtime,
+                               tick_s=1.0, max_len=None)
+    assert default_max_ticks_columnar(gen, gsvc, 1.0) \
+        == default_max_ticks(gen.to_jobs(), engine, 1.0)
+
+
+# ------------------------------------------- scalar/fleet event-skipping
+def test_scalar_event_skip_bit_identical():
+    """ServeDriver(event_skip=True) vs the dense loop on the parity trace
+    (DSP + contention) and in dedicated mode: identical stats, events and
+    per-task times — skipping must be invisible."""
+    for kw in (dict(capacity=PARITY_CAPACITY, policy=PARITY_POLICY,
+                    contention=PARITY_CONTENTION),
+               dict(capacity=6, fixed_nodes=6)):
+        dense = run_scalar(parity_stream(), event_skip=False, **kw)
+        skip = run_scalar(parity_stream(), event_skip=True, **kw)
+        assert_parity(dense, skip)
+
+
+def _fleet_run(event_skip, widths):
+    spec = [(3, 0)] * 5 + [(2, 1)] * 3
+    streams, base = [], 0
+    for w, width in enumerate(widths):
+        jobs = [replace(j, nodes=width)
+                for j in _dag_from_spec(spec, wid=w, base=base)]
+        base += 100
+        streams.append([(float(5 * w), jobs)])
+    policies = [MgmtPolicy(initial=w, ratio=1.0, scan_interval=3.0,
+                           release_interval=60.0) for w in widths]
+    fleet = ServeFleet(streams, engine=EmulatedEngine(8),
+                       coordination="first-come", policies=policies,
+                       widths=list(widths), event_skip=event_skip)
+    fs = fleet.run()
+    events = [(e.t, e.tre, e.delta) for e in fleet.provider.adjust_events]
+    times = {j.name: (j.start, j.finish)
+             for s in streams for _, jobs in s for j in jobs}
+    return fs.as_dict(), events, times
+
+
+def test_fleet_of_one_event_skip_matches_dense_driver():
+    """ServeFleet(N=1, event_skip=True) ≡ the dense ServeDriver on the
+    PR 3 parity trace — the fleet's skip horizon must respect the shared
+    pool exactly as the single driver's does."""
+    ref = run_scalar(parity_stream(), capacity=PARITY_CAPACITY,
+                     policy=PARITY_POLICY, contention=PARITY_CONTENTION,
+                     event_skip=False)
+    stream = parity_stream()
+    fleet = ServeFleet([stream], engine=EmulatedEngine(PARITY_CAPACITY),
+                       coordination="first-come", policies=PARITY_POLICY,
+                       names=["parity-serve"], contention=PARITY_CONTENTION,
+                       event_skip=True)
+    fs = fleet.run()
+    assert ref[0] == fleet.lanes[0].stats.as_dict()
+    assert ref[1] == [(e.t, e.tre, e.delta)
+                      for e in fleet.provider.adjust_events]
+    assert ref[2] == {j.name: (j.start, j.finish)
+                      for _, jobs in stream for j in jobs}
+    assert fs.workflows_completed == 2
+
+
+def test_fleet_event_skip_bit_identical():
+    """ServeFleet(event_skip=True) vs dense, homogeneous and mixed-width:
+    the fleet's pool-wide finish horizon and per-lane skip candidates must
+    never jump a tenant past another tenant's event."""
+    for widths in ((1, 1, 1), (1, 2, 4)):
+        dense = _fleet_run(False, widths)
+        skip = _fleet_run(True, widths)
+        assert_parity(dense, skip)
+        assert dense[0]["workflows_completed"] == 3
+
+
+class _RecordingSkipDriver(ServeDriver):
+    """Records every ``next_event_tick`` window the run loop acted on."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.windows: list[tuple[int, int]] = []
+
+    def next_event_tick(self, k):
+        kn = super().next_event_tick(k)
+        self.windows.append((k, kn))
+        return kn
+
+
+# ------------------------------------------------- hypothesis properties
+@settings(max_examples=25, deadline=None)
+@given(
+    spec=st.lists(st.tuples(st.integers(1, 9), st.integers(0, 3)),
+                  min_size=1, max_size=10),
+    arrival2=st.integers(0, 60),
+    hold=st.integers(0, 5),
+    release_t=st.integers(5, 90),
+)
+def test_property_event_skip_never_jumps_past_events(spec, arrival2, hold,
+                                                     release_t):
+    """Two random DAG workflows + scripted contention: (a) the skipped run
+    is bit-identical to the dense run; (b) no recorded skip window
+    contains an arrival's due tick, a contention instant (where deferred
+    grants land), or a release boundary — the events the ISSUE contract
+    says skipping must never jump."""
+    def build(event_skip, cls=ServeDriver):
+        w1 = _dag_from_spec(spec, wid=0, base=0)
+        w2 = [replace(j, arrival=float(arrival2))
+              for j in _dag_from_spec(spec, wid=1, base=100)]
+        stream = [(0.0, w1), (float(arrival2), w2)]
+        contention = ([(1.0, "hog", hold),
+                       (float(release_t), "hog", -hold)] if hold else [])
+        prov = ResourceProvider(6, coordination="first-come")
+        drv = cls(stream, provider=prov, engine=EmulatedEngine(6),
+                  policy=MgmtPolicy(initial=1, ratio=1.0, scan_interval=3.0,
+                                    release_interval=60.0),
+                  contention=contention, event_skip=event_skip)
+        stats = drv.run()
+        events = [(e.t, e.tre, e.delta) for e in prov.adjust_events]
+        times = {j.name: (j.start, j.finish)
+                 for _, jobs in stream for j in jobs}
+        return drv, (stats.as_dict(), events, times)
+
+    _, dense = build(False)
+    drv, skipped = build(True, cls=_RecordingSkipDriver)
+    assert dense == skipped
+
+    event_ticks = {due_tick_floor(float(arrival2), 1.0),
+                   due_tick_floor(0.0, 1.0)}
+    if hold:
+        event_ticks |= {due_tick_floor(1.0, 1.0),
+                        due_tick_floor(float(release_t), 1.0)}
+    for k, kn in drv.windows:
+        for j in range(k + 1, kn):          # the ticks the loop skipped
+            assert j not in event_ticks, (k, kn, j)
+            assert j % drv._release_every != 0, (k, kn, j)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    spec=st.lists(st.tuples(st.integers(1, 7), st.integers(0, 3)),
+                  min_size=1, max_size=9),
+    arrival2=st.integers(0, 40),
+    hold=st.integers(0, 4),
+)
+def test_property_columnar_parity_random_dags(spec, arrival2, hold):
+    """Random DAG shapes through both paths: the columnar batch tick
+    (finish sequencing, FCFS prefix dispatch, arrival spans) matches the
+    scalar reference on workloads far from the Montage template."""
+    def stream():
+        w1 = _dag_from_spec(spec, wid=0, base=0)
+        w2 = [replace(j, arrival=float(arrival2))
+              for j in _dag_from_spec(spec, wid=1, base=100)]
+        return [(0.0, w1), (float(arrival2), w2)]
+
+    contention = ([(1.0, "hog", hold), (50.0, "hog", -hold)]
+                  if hold else [])
+    kw = dict(capacity=6,
+              policy=MgmtPolicy(initial=1, ratio=1.0, scan_interval=3.0,
+                                release_interval=60.0),
+              contention=contention)
+    ref = run_scalar(stream(), **kw)
+    cs = ColumnarStream.from_jobs(stream())
+    assert_parity(ref, run_columnar(cs, **kw))

@@ -49,6 +49,10 @@ def main(argv: list[str] | None = None) -> int:
                          "baseline.json)")
     ap.add_argument("--no-baseline", action="store_true",
                     help="report every finding, ignoring the baseline")
+    ap.add_argument("--fix", action="store_true",
+                    help="rewrite flagged DC101 bare asserts in place "
+                         "into guarded raises, then re-lint; baseline "
+                         "entries paid down by the rewrite are pruned")
     ap.add_argument("--update-baseline", action="store_true",
                     help="prune stale entries from the baseline (burn-"
                          "down); never adds entries unless --rebaseline")
@@ -74,6 +78,16 @@ def main(argv: list[str] | None = None) -> int:
             return 2
         paths.append(q)
 
+    if args.fix:
+        from tools.dclint import fix as fix_mod
+        n_fixed, n_skipped = fix_mod.fix_paths(paths, root=root)
+        if not args.json:
+            msg = f"dclint --fix: rewrote {n_fixed} bare assert(s)"
+            if n_skipped:
+                msg += (f", skipped {n_skipped} not starting their line "
+                        f"(fix by hand)")
+            print(msg)
+
     violations = lint_paths(paths, root=root)
     if args.no_baseline:
         new, baselined, stale = violations, [], []
@@ -81,7 +95,7 @@ def main(argv: list[str] | None = None) -> int:
         data = baseline_mod.load(args.baseline)
         new, baselined, stale = baseline_mod.split(violations, data)
 
-    if args.update_baseline:
+    if args.update_baseline or (args.fix and stale):
         path = args.baseline or baseline_mod.DEFAULT_PATH
         keep = violations if args.rebaseline else baselined
         baseline_mod.write(path, keep)

@@ -1,0 +1,114 @@
+"""``dclint --fix``: the mechanical DC101 rewrite (assert -> guarded raise).
+
+DC101's fix pattern is purely syntactic, so the linter can apply it::
+
+    assert COND              ->  if not COND:
+                                     raise RuntimeError(
+                                         'invariant violated: COND')
+    assert COND, "msg"       ->  if not COND:
+                                     raise RuntimeError('msg')
+    assert COND, EXPR        ->  if not COND:
+                                     raise RuntimeError(
+                                         'invariant violated: COND: '
+                                         + repr(EXPR))
+    assert not COND          ->  if COND: ...   (double negation stripped)
+
+The guard is always ``not COND`` — never an inverted comparison — because
+comparison inversion is not semantics-preserving (``not (a <= b)`` differs
+from ``a > b`` under NaN). Non-string messages go through ``repr`` rather
+than an f-string so ``ast.unparse`` never has to re-quote the expression
+inside a format literal (fragile before 3.12).
+
+Only findings the linter itself reports are rewritten — the fix is driven
+from ``lint_file`` output, so rule scoping and ``# dclint: disable``
+pragmas are honored for free. Asserts that do not start their line
+(``if x: assert y``) are skipped and left flagged for a human. Rewrites
+are applied bottom-up so earlier line numbers stay valid; fixed findings
+then show up as *stale* baseline entries, which the CLI prunes.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from tools.dclint import REPO_ROOT, lint_file
+
+__all__ = ["fix_file", "fix_paths"]
+
+
+def _guarded_raise(node: ast.Assert) -> str:
+    """Render the replacement ``if``/``raise`` block (no indentation)."""
+    test = node.test
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        cond: ast.expr = test.operand          # assert not X  ->  if X:
+    else:
+        cond = ast.UnaryOp(op=ast.Not(), operand=test)
+    cond_text = ast.unparse(node.test)
+    msg = node.msg
+    if msg is None:
+        msg = ast.Constant(f"invariant violated: {cond_text}")
+    elif not (isinstance(msg, ast.JoinedStr)
+              or (isinstance(msg, ast.Constant) and isinstance(msg.value, str))):
+        msg = ast.BinOp(
+            left=ast.Constant(f"invariant violated: {cond_text}: "),
+            op=ast.Add(),
+            right=ast.Call(func=ast.Name(id="repr", ctx=ast.Load()),
+                           args=[msg], keywords=[]))
+    guard = ast.If(
+        test=cond,
+        body=[ast.Raise(
+            exc=ast.Call(func=ast.Name(id="RuntimeError", ctx=ast.Load()),
+                         args=[msg], keywords=[]),
+            cause=None)],
+        orelse=[])
+    return ast.unparse(ast.fix_missing_locations(guard))
+
+
+def fix_file(path: Path, *, root: Path | None = None) -> tuple[int, int]:
+    """Rewrite flagged DC101 asserts in ``path`` in place.
+
+    -> ``(n_fixed, n_skipped)``; skipped asserts are flagged but not
+    statement-initial on their line, so a block rewrite can't land.
+    """
+    root = root or REPO_ROOT
+    flagged = {v.line for v in lint_file(path, root=root)
+               if v.code == "DC101"}
+    if not flagged:
+        return 0, 0
+    src = path.read_text(encoding="utf-8")
+    tree = ast.parse(src, filename=str(path))
+    lines = src.splitlines(keepends=True)
+    targets = [n for n in ast.walk(tree)
+               if isinstance(n, ast.Assert) and n.lineno in flagged]
+    fixed = skipped = 0
+    for node in sorted(targets, key=lambda n: n.lineno, reverse=True):
+        indent = lines[node.lineno - 1][:node.col_offset]
+        if indent.strip():
+            skipped += 1
+            continue
+        repl = [indent + ln + "\n"
+                for ln in _guarded_raise(node).splitlines()]
+        lines[node.lineno - 1:node.end_lineno] = repl
+        fixed += 1
+    if fixed:
+        path.write_text("".join(lines), encoding="utf-8")
+    return fixed, skipped
+
+
+def fix_paths(paths: list[Path], *, root: Path | None = None
+              ) -> tuple[int, int]:
+    """Apply :func:`fix_file` to every ``.py`` file under ``paths``."""
+    root = root or REPO_ROOT
+    files: list[Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(q for q in p.rglob("*.py")
+                                if "__pycache__" not in q.parts))
+        elif p.suffix == ".py":
+            files.append(p)
+    fixed = skipped = 0
+    for f in files:
+        nf, ns = fix_file(f, root=root)
+        fixed += nf
+        skipped += ns
+    return fixed, skipped
