@@ -72,6 +72,23 @@ SPECS: dict[str, dict] = {
         },
         "tol_mult": {"workflows_per_sec": 4.0},
     },
+    "serve_fleet_real": {
+        # heterogeneous fleet on the physical paged jax engine: the
+        # parity counts are invariants (emulator == real == contiguous,
+        # field for field), the economics gate like the emulated matrix,
+        # and decode throughput tolerates CI timing noise
+        "rows": lambda d: d["runs"],
+        "key": ("mix",),
+        "metrics": {
+            "parity_mismatches": "zero",
+            "paged_vs_contiguous_mismatches": "zero",
+            "over_admissions": "zero",
+            "isolation_violations": "zero",
+            "billed_vs_dedicated": "lower",
+            "decode_steps_per_sec": "higher",
+        },
+        "tol_mult": {"decode_steps_per_sec": 4.0},
+    },
     "scale_curve": {
         "rows": lambda d: d["curve"],
         "key": ("n_providers",),

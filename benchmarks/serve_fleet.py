@@ -57,6 +57,25 @@ def _require(cond: bool, msg: str) -> None:
         raise RuntimeError(f"serve_fleet gate: {msg}")
 
 
+#: tokens per KV page for the paged ledger riding under every
+#: consolidated cell (and for the physical engine on the ``--real`` leg)
+PAGE_SIZE = 8
+
+
+def fleet_depth(streams, page_size: int = PAGE_SIZE) -> int:
+    """Cache depth serving every request's full decode mark —
+    ``max(prompt + decode + 1)`` over all jobs, rounded up to a page
+    multiple. At this depth ``decode_budget`` never caps a mark, so a
+    ``max_len``-capped (and paged) engine's service ticks — and therefore
+    every ``FleetStats`` field — are identical to the uncapped engine's."""
+    need = 2
+    for stream in streams:
+        for _, jobs in stream:
+            for j in jobs:
+                need = max(need, max(j.prompt_len, 1) + j.decode_len + 1)
+    return -(-need // page_size) * page_size
+
+
 def eager_peak_slots(stream) -> int:
     """Peak instantaneous slot demand of the stream under eager execution
     (every task decodes the moment its dependencies finish): the engine
@@ -129,9 +148,12 @@ def tenant_policy(base: MgmtPolicy, width: int) -> MgmtPolicy:
                       release_interval=base.release_interval)
 
 
-def run_dedicated(streams, widths, *, policy: MgmtPolicy) -> dict:
+def run_dedicated(streams, widths, *, policy: MgmtPolicy,
+                  max_len: int | None = None) -> dict:
     """N dedicated engines: per-tenant fixed width-sized slots, no
-    negotiation — a width-w tenant's engine bills w units per slot."""
+    negotiation — a width-w tenant's engine bills w units per slot.
+    ``max_len`` caps decode marks to a cache depth, matching a real
+    engine baseline (the ``--real`` leg compares like with like)."""
     t0 = time.perf_counter()
     total = {"node_hours": 0.0, "slots": 0, "workflows": 0, "tasks": 0,
              "over_admissions": 0, "busy": 0.0, "owned": 0.0,
@@ -141,7 +163,7 @@ def run_dedicated(streams, widths, *, policy: MgmtPolicy) -> dict:
         # `initial` slots at this width, so the floor is width-invariant
         slots = max(eager_peak_slots(stream), policy.initial)
         drv = ServeDriver(stream, provider=ProvisionService(),
-                          engine=EmulatedEngine(slots),
+                          engine=EmulatedEngine(slots, max_len=max_len),
                           fixed_nodes=slots * w, slot_width=w,
                           name=f"dedicated-t{i}")
         st = drv.run()
@@ -167,17 +189,25 @@ def run_consolidated(streams, widths, *, coordination: str,
                      policy: MgmtPolicy, event_skip: bool = True) -> dict:
     """The fleet: one pool sized at the fleet-wide weighted hourly decode
     peak. Event-skipping is on by default — pinned bit-identical to the
-    dense loop by the parity suite, so it changes wall clock only."""
+    dense loop by the parity suite, so it changes wall clock only.
+
+    Every cell runs with the physical page ledger underneath
+    (``page_size=PAGE_SIZE`` over a ``fleet_depth``-deep cache): admits
+    allocate real KV pages under their tenant's quota and conservation is
+    swept every tick, yet because the depth serves every mark in full the
+    stats stay field-for-field identical to the unpaged PR 7 cells."""
     n = len(streams)
     policies = [tenant_policy(policy, w) for w in widths]
     # size the pool exactly as the registered scenario would: one source
     # of truth for the hourly-peak estimate and the liveness floor
     capacity = ServeFleetSystem().default_capacity(streams, policies,
                                                    widths=widths)
-    fleet = ServeFleet(streams, engine=EmulatedEngine(capacity),
+    depth = fleet_depth(streams)
+    fleet = ServeFleet(streams,
+                       engine=EmulatedEngine(capacity, max_len=depth),
                        coordination=coordination, policies=policies,
                        widths=widths, name=f"fleet-{coordination}-n{n}",
-                       event_skip=event_skip)
+                       event_skip=event_skip, page_size=PAGE_SIZE)
     t0 = time.perf_counter()
     fs = fleet.run()
     wall = time.perf_counter() - t0
@@ -189,8 +219,16 @@ def run_consolidated(streams, widths, *, coordination: str,
     _require(fs.isolation_violations == 0,
              f"{coordination} N={n} had {fs.isolation_violations} "
              f"slot-isolation violations")
+    pager = fleet.pool.pager
+    pager.check_conservation()
+    _require(pager.used_pages == 0,
+             f"{coordination} N={n} leaked {pager.used_pages} KV pages "
+             f"past the last finish")
     out = fs.as_dict()
     out["wall_s"] = wall
+    out["page_size"] = PAGE_SIZE
+    out["pool_pages"] = pager.capacity_pages
+    out["peak_pages_used"] = pager.peak_used
     return out
 
 
@@ -226,6 +264,11 @@ def run_cell(streams, widths, *, mix: str, coordination: str,
         "over_admissions": fleet["over_admissions"],
         "isolation_violations": fleet["isolation_violations"],
         "peak_pool_active": fleet["peak_pool_active"],
+        "page_size": fleet["page_size"],
+        "pool_pages": fleet["pool_pages"],
+        "peak_pages_used": fleet["peak_pages_used"],
+        "page_utilization": (fleet["peak_pages_used"]
+                             / max(fleet["pool_pages"], 1)),
         "wall_s": fleet["wall_s"],
         "workflows_per_sec": (fleet["workflows_completed"]
                               / max(fleet["wall_s"], 1e-12)),
@@ -245,6 +288,151 @@ def run_cell(streams, widths, *, mix: str, coordination: str,
 # unit, so elastic growth does not thrash fresh lease-hours (§4.4(2))
 FLEET_POLICY = MgmtPolicy(initial=2, ratio=2.0, scan_interval=3.0,
                           release_interval=3600.0)
+
+# --real leg sizing: a smoke-config musicgen engine, 8 batch slots over a
+# 48-token cache = 48 / PAGE_SIZE pages per unit in the physical pool
+REAL_MAX_BATCH, REAL_MAX_LEN = 8, 48
+
+
+def _real_fleet_run(args, mix_spec: str, *, page_size: int | None,
+                    seed: int) -> tuple[dict, dict]:
+    """One heterogeneous fleet over the REAL jax engine (paged when
+    ``page_size`` is set, contiguous otherwise). Streams are regenerated
+    from the seed so every run replays the identical workload. Returns
+    ``(FleetStats.as_dict(), extras)``."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.configs.base import ParallelConfig
+    from repro.models.lm import LM
+    from repro.serve.driver import JaxEngineAdapter
+    from repro.serve.engine import Engine
+
+    cfg = get_smoke_config("musicgen-large")
+    lm = LM(cfg)
+    rt = lm.runtime(ParallelConfig(attn_q_chunk=16, attn_kv_chunk=16))
+    params = lm.init(jax.random.key(0))[0]
+    engine = Engine(lm, params, rt, max_batch=REAL_MAX_BATCH,
+                    max_len=REAL_MAX_LEN, page_size=page_size)
+    adapter = JaxEngineAdapter(engine, seed=seed)
+
+    mix = parse_mix(mix_spec)
+    streams, widths = tenant_streams(len(mix), args.workflows, seed,
+                                     args.jobs_scale, args.period, mix=mix)
+    base = MgmtPolicy(initial=1, ratio=2.0, scan_interval=3.0,
+                      release_interval=60.0)
+    fleet = ServeFleet(streams, engine=adapter, coordination="coordinated",
+                       policies=[tenant_policy(base, w) for w in widths],
+                       widths=widths, event_skip=False,
+                       # one name for the paged, contiguous and emulated
+                       # runs: stats must match bit-for-bit, labels included
+                       name="real-fleet", page_size=page_size)
+    t0 = time.perf_counter()
+    fs = fleet.run()
+    wall = time.perf_counter() - t0
+    _require(fs.workflows_completed == fs.workflows_expected,
+             f"real mix={mix_spec} paged={bool(page_size)} completed "
+             f"{fs.workflows_completed}/{fs.workflows_expected}")
+    extras = {"wall_s": wall, "decode_steps": engine.steps,
+              "widths": widths}
+    if page_size is not None:
+        fleet.pool.pager.check_conservation()
+        _require(engine.pager.used_pages == fleet.pool.pager.used_pages,
+                 "engine/pool page ledgers diverged post-run")
+        extras["pool_pages"] = fleet.pool.pager.capacity_pages
+        extras["peak_pages_used"] = fleet.pool.pager.peak_used
+    return fs.as_dict(), extras
+
+
+def run_real_fleet(args) -> dict:
+    """The ``--real`` leg: the heterogeneous 1/2/4 fleet on the PHYSICAL
+    paged engine, pinned three ways —
+
+    - **emulator parity**: an ``EmulatedEngine(max_len=REAL_MAX_LEN)``
+      twin fleet replays the identical streams; every deterministic
+      ``FleetStats`` field must match the live-jax run bit-for-bit
+      (``parity_mismatches == 0``).
+    - **paged vs contiguous**: the same fleet on a contiguous-cache
+      ``Engine`` must reproduce the paged stats field-for-field
+      (``paged_vs_contiguous_mismatches == 0``) — paging is a memory
+      layout, never a scheduling input.
+    - **economics**: billed node-hours under a width-capped dedicated
+      baseline (``billed_vs_dedicated``), the paper's consolidation
+      claim surviving contact with a real engine.
+    """
+    rows = []
+    for mix_spec in args.mixes:
+        seed = args.seed
+        paged, paged_x = _real_fleet_run(args, mix_spec,
+                                         page_size=PAGE_SIZE, seed=seed)
+        contig, contig_x = _real_fleet_run(args, mix_spec,
+                                           page_size=None, seed=seed)
+
+        mix = parse_mix(mix_spec)
+        streams, widths = tenant_streams(len(mix), args.workflows, seed,
+                                         args.jobs_scale, args.period,
+                                         mix=mix)
+        base = MgmtPolicy(initial=1, ratio=2.0, scan_interval=3.0,
+                          release_interval=60.0)
+        twin = ServeFleet(streams,
+                          engine=EmulatedEngine(REAL_MAX_BATCH,
+                                                max_len=REAL_MAX_LEN),
+                          coordination="coordinated",
+                          policies=[tenant_policy(base, w) for w in widths],
+                          widths=widths, event_skip=False,
+                          name="real-fleet", page_size=PAGE_SIZE)
+        emu = twin.run().as_dict()
+
+        streams, widths = tenant_streams(len(mix), args.workflows, seed,
+                                         args.jobs_scale, args.period,
+                                         mix=mix)
+        dedicated = run_dedicated(streams, widths, policy=base,
+                                  max_len=REAL_MAX_LEN)
+
+        parity = [k for k in emu if emu[k] != paged.get(k)]
+        pvc = [k for k in paged if paged[k] != contig.get(k)]
+        row = {
+            "mix": mix_spec,
+            "n_tenants": len(mix),
+            "widths": paged_x["widths"],
+            "workflows": paged["workflows_completed"],
+            "tasks": paged["tasks_completed"],
+            "parity_mismatches": len(parity),
+            "parity_fields": parity,
+            "paged_vs_contiguous_mismatches": len(pvc),
+            "paged_vs_contiguous_fields": pvc,
+            "over_admissions": paged["over_admissions"],
+            "isolation_violations": paged["isolation_violations"],
+            "billed_node_hours": paged["node_hours"],
+            "dedicated_node_hours": dedicated["node_hours"],
+            "billed_vs_dedicated": (paged["node_hours"]
+                                    / max(dedicated["node_hours"], 1e-12)),
+            "page_size": PAGE_SIZE,
+            "pool_pages": paged_x["pool_pages"],
+            "peak_pages_used": paged_x["peak_pages_used"],
+            "decode_steps": paged_x["decode_steps"],
+            "contiguous_decode_steps": contig_x["decode_steps"],
+            "wall_s": paged_x["wall_s"],
+            "contiguous_wall_s": contig_x["wall_s"],
+            "decode_steps_per_sec": (paged_x["decode_steps"]
+                                     / max(paged_x["wall_s"], 1e-12)),
+        }
+        _require(row["parity_mismatches"] == 0,
+                 f"emulator-vs-real stats diverged on {parity} "
+                 f"(mix={mix_spec})")
+        _require(row["paged_vs_contiguous_mismatches"] == 0,
+                 f"paged-vs-contiguous stats diverged on {pvc} "
+                 f"(mix={mix_spec})")
+        rows.append(row)
+    return {
+        "benchmark": "serve_fleet_real",
+        "config": {"workflows": args.workflows,
+                   "jobs_scale": args.jobs_scale, "period_s": args.period,
+                   "seed": args.seed, "mixes": args.mixes,
+                   "arch": "musicgen-large", "max_batch": REAL_MAX_BATCH,
+                   "max_len": REAL_MAX_LEN, "page_size": PAGE_SIZE},
+        "runs": rows,
+    }
 
 
 def run_matrix_cell(cell: tuple) -> list[dict]:
@@ -283,14 +471,35 @@ def main(argv=None) -> dict:
                          "bit-identical either way, only wall differs)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized sweep: fewer tenants, smaller mosaics")
-    ap.add_argument("--out", default="BENCH_serve_fleet.json")
+    ap.add_argument("--real", action="store_true",
+                    help="heterogeneous fleet on the real jax engine "
+                         "(paged + contiguous + emulated twin), pinning "
+                         "emulator-vs-real and paged-vs-contiguous parity")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+    if args.out is None:
+        args.out = ("BENCH_serve_fleet_real.json" if args.real
+                    else "BENCH_serve_fleet.json")
 
     if args.smoke:
         args.tenants = [1, 3, 6]
         args.workflows = 10
         args.jobs_scale = 0.04
         args.period = 3600.0
+
+    if args.real:
+        args.workflows = min(args.workflows, 4)
+        out = run_real_fleet(args)
+        with open(args.out, "w") as fh:
+            json.dump(out, fh, indent=2)
+        print(f"wrote {args.out} ({len(out['runs'])} real-engine cells)")
+        for r in out["runs"]:
+            print(f"  mix={r['mix']:>6s} parity={r['parity_mismatches']} "
+                  f"paged-vs-contig={r['paged_vs_contiguous_mismatches']} "
+                  f"billed/dedic={r['billed_vs_dedicated']:.3f} "
+                  f"pages={r['peak_pages_used']}/{r['pool_pages']} "
+                  f"steps={r['decode_steps']} wall={r['wall_s']:.1f}s")
+        return out
 
     policy = FLEET_POLICY
     cells = [(mix_spec, n, args.workflows, args.seed, args.jobs_scale,

@@ -21,7 +21,14 @@ def flash_attention_ref(q, k, v, *, causal: bool = True):
 
 
 def decode_attention_ref(q, k_cache, v_cache, lengths):
-    """q: (B,H,hd); caches: (B,S,KVH,hd); lengths: (B,). GQA decode."""
+    """q: (B,H,hd); caches: (B,S,KVH,hd); lengths: (B,). GQA decode.
+
+    Rows with ``lengths == 0`` have no valid positions: softmax over an
+    all-masked row would silently average garbage (uniform weights over
+    NEG_INF logits), so the contract is pinned to exact zero-fill — the
+    same semantics the online-softmax kernels produce by skipping every
+    block (acc stays 0, the 1e-30 l-clamp divides 0 by it).
+    """
     B, H, hd = q.shape
     KVH = k_cache.shape[2]
     G = H // KVH
@@ -32,6 +39,7 @@ def decode_attention_ref(q, k_cache, v_cache, lengths):
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(f32))
+    o = jnp.where((lengths > 0)[:, None, None, None], o, 0.0)
     return o.reshape(B, H, hd).astype(q.dtype)
 
 

@@ -192,7 +192,9 @@ def decode_attention(q, k_cache, v_cache, lengths):
     """Single-token grouped-query attention against a cache.
 
     q: (B,H,hd); k_cache/v_cache: (B,Sk,KVH,hd); lengths: (B,) valid prefix.
-    Returns (B,H,hd). No KV repetition is materialized.
+    Returns (B,H,hd). No KV repetition is materialized. Rows with
+    ``lengths == 0`` are zero-filled (never a softmax over an all-masked
+    row) — the same contract as kernels/ref.py and the pallas kernels.
     """
     B, H, hd = q.shape
     KVH = k_cache.shape[2]
@@ -204,4 +206,5 @@ def decode_attention(q, k_cache, v_cache, lengths):
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    o = jnp.where((lengths > 0)[:, None, None, None], o, 0)
     return o.reshape(B, H, hd)

@@ -36,15 +36,36 @@ def block_init(scope, cfg, i: int):
         mlp_init(scope.sub("mlp"), cfg, cfg.d_ff)
 
 
-def attn_block(p, cfg, rt, x, positions, cache=None, lengths=None, decode=False):
-    """Returns (out (B,S,d), new_cache (k,v))."""
+def attn_block(p, cfg, rt, x, positions, cache=None, lengths=None,
+               decode=False, page_table=None):
+    """Returns (out (B,S,d), new_cache (k,v)).
+
+    With ``page_table`` (B, pages_per_row) the cache leaves are a shared
+    page pool (n_pages, page_size, KVH, hd): the new token's K/V scatter
+    through the table and attention runs over the gathered per-row view.
+    Gathered masked positions contribute exactly 0 probability, so the
+    result is bit-identical to the contiguous path over the same tokens.
+    """
     B, S, _ = x.shape
     q, k, v = qkv_proj(p, cfg, x, positions)
     if decode:
         assert S == 1
         qd = q[:, 0]  # (B,H,hd)
         k_cache, v_cache = cache
-        if rt.decode_kv_shard(cfg) == "seq":
+        if page_table is not None:
+            ps = k_cache.shape[1]
+            bidx = jnp.arange(B)
+            page = page_table[bidx, lengths // ps]
+            off = lengths % ps
+            k_cache = k_cache.at[page, off].set(k[:, 0])
+            v_cache = v_cache.at[page, off].set(v[:, 0])
+            n_pt = page_table.shape[1]
+            k_view = k_cache[page_table].reshape(
+                B, n_pt * ps, *k_cache.shape[2:])
+            v_view = v_cache[page_table].reshape(
+                B, n_pt * ps, *v_cache.shape[2:])
+            o = decode_attention(qd, k_view, v_view, lengths + 1)
+        elif rt.decode_kv_shard(cfg) == "seq":
             o, k_cache, v_cache = seq_sharded_decode_attention(
                 qd, k_cache, v_cache, lengths, k[:, 0], v[:, 0],
                 rt.mesh, AXIS_MODEL)
@@ -86,7 +107,7 @@ def attn_block(p, cfg, rt, x, positions, cache=None, lengths=None, decode=False)
 
 
 def block_apply(p, cfg, rt, x, positions, i, *, cache=None, lengths=None,
-                decode=False):
+                decode=False, page_table=None):
     """One block. cache: kind-dependent pytree (or None for training).
 
     Returns (x, new_cache, aux_losses dict).
@@ -95,7 +116,8 @@ def block_apply(p, cfg, rt, x, positions, i, *, cache=None, lengths=None,
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
     if cfg.block_kind(i) == "attn":
         out, new_cache = attn_block(p["attn"], cfg, rt, h, positions,
-                                    cache=cache, lengths=lengths, decode=decode)
+                                    cache=cache, lengths=lengths,
+                                    decode=decode, page_table=page_table)
     else:
         conv_state, ssm_state = cache if cache is not None else (None, None)
         out, new_cache = mamba_apply(p["mamba"], cfg, h, conv_state=conv_state,

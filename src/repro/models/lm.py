@@ -195,11 +195,21 @@ class LM:
         (x, aux), caches = jax.lax.scan(body, (x, _zero_aux()), params["blocks"])
         return x, aux, caches
 
-    def decode_backbone(self, params, rt: Runtime, x, lengths, caches):
-        """One-token step through all layers, updating caches functionally."""
+    def decode_backbone(self, params, rt: Runtime, x, lengths, caches,
+                        page_table=None):
+        """One-token step through all layers, updating caches functionally.
+
+        With ``page_table`` (B, pages_per_row) int32, attention cache
+        leaves are a shared page pool (R, n_pages, page_size, KVH, hd)
+        (see ``paged_cache_shapes``); SSM caches stay slot-indexed.
+        """
         cfg = self.cfg
         period = cfg.pattern_period
         positions = lengths[:, None]
+        if page_table is not None and rt.decode_kv_shard(cfg) == "seq":
+            raise ValueError(
+                "paged decode requires decode_kv_shard != 'seq' "
+                "(page tables gather across the sequence axis)")
 
         def body(x, xs):
             layer_params, layer_caches = xs
@@ -208,7 +218,8 @@ class LM:
                 pp = self._maybe_gather(rt, f"pos{i}", layer_params[f"pos{i}"])
                 x, cache_i, _ = block_apply(
                     pp, cfg, rt, x, positions, i,
-                    cache=layer_caches[f"pos{i}"], lengths=lengths, decode=True)
+                    cache=layer_caches[f"pos{i}"], lengths=lengths,
+                    decode=True, page_table=page_table)
                 new_caches[f"pos{i}"] = cache_i
             return x, new_caches
 
@@ -257,11 +268,13 @@ class LM:
         logits = self.logits(params, x[:, -1:])
         return logits[:, 0], caches, aux
 
-    def decode(self, params, rt: Runtime, tokens, lengths, caches):
+    def decode(self, params, rt: Runtime, tokens, lengths, caches,
+               page_table=None):
         """tokens: (B,1[,ncb]); lengths: (B,) current cache fill.
         Returns (logits (B,[ncb,]V), new_caches)."""
         x = self.embed(params, {"tokens": tokens})
-        x, new_caches = self.decode_backbone(params, rt, x, lengths, caches)
+        x, new_caches = self.decode_backbone(params, rt, x, lengths, caches,
+                                             page_table=page_table)
         x = rmsnorm(params["final_norm"], x, self.cfg.norm_eps)
         logits = self.logits(params, x)
         return logits[:, 0], new_caches
@@ -298,4 +311,30 @@ class LM:
 
     def init_cache(self, batch_size: int, max_len: int):
         shapes = self.cache_shapes(batch_size, max_len)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    def paged_cache_shapes(self, batch_size: int, n_pages: int,
+                           page_size: int):
+        """Like ``cache_shapes`` but attention KV lives in a shared page
+        pool (R, n_pages, page_size, KVH, hd) addressed via a per-row page
+        table. SSM state is O(1) per row (no sequence axis), so it stays
+        slot-indexed — paging it would buy nothing."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        period = cfg.pattern_period
+        R = cfg.n_layers // period
+        caches = {}
+        for i in range(period):
+            if cfg.block_kind(i) == "attn":
+                kv = jax.ShapeDtypeStruct(
+                    (R, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
+                    dtype)
+                caches[f"pos{i}"] = (kv, kv)
+            else:
+                caches[f"pos{i}"] = self.cache_shapes(
+                    batch_size, page_size)[f"pos{i}"]
+        return caches
+
+    def init_paged_cache(self, batch_size: int, n_pages: int, page_size: int):
+        shapes = self.paged_cache_shapes(batch_size, n_pages, page_size)
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)

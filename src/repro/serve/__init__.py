@@ -15,6 +15,7 @@ from repro.serve.driver import (  # noqa: F401
 from repro.serve.fleet import (  # noqa: F401
     FleetStats, PartitionedEngine, ServeFleet, TenantSlice,
 )
+from repro.serve.paged import PagedKVAllocator, pages_for  # noqa: F401
 
 _LAZY = ("Engine", "Request")
 

@@ -68,8 +68,11 @@ def service_ticks_batch(decode_len, prompt_len, runtime, *, tick_s: float,
     rt = np.maximum(np.ceil(np.asarray(runtime, float) / tick_s),
                     1).astype(np.int64)
     if max_len is not None:
-        pl = np.maximum(np.asarray(prompt_len, np.int64), 1)
-        capped = np.maximum(np.minimum(dl + 1, max_len - pl), 2) - 1
+        pl = np.minimum(np.maximum(np.asarray(prompt_len, np.int64), 1),
+                        max_len - 1)
+        room = max_len - pl
+        capped = np.maximum(
+            np.maximum(np.minimum(dl + 1, room), np.minimum(2, room)) - 1, 1)
     else:
         capped = dl
     return np.where(dl > 0, capped, rt)
@@ -78,14 +81,30 @@ def service_ticks_batch(decode_len, prompt_len, runtime, *, tick_s: float,
 def decode_budget(decode_len: int, prompt_len: int, max_len: int) -> int:
     """Token budget a ``max_len``-deep cache can give a request: the
     ``decode_len`` service mark plus the prefill token, capped to the
-    cache room left after the prompt, floored at 2 (prefill emits token 1
-    at admit, so a budget of R+1 finishes after exactly R decode steps).
-    THE one formula both backends must share: ``JaxEngineAdapter`` sizes
-    ``max_new_tokens`` with it and a cache-aware ``EmulatedEngine`` caps
-    its service ticks to ``decode_budget(...) - 1`` — computing the cap in
+    cache room left after the prompt, floored at 2 tokens where the room
+    allows it (prefill emits token 1 at admit, so a budget of R+1
+    finishes after exactly R decode steps).
+
+    The prompt is clamped to ``max_len - 1`` first — the cache needs one
+    free position for the decode write, so a prompt at/above ``max_len``
+    must be truncated by the caller (``JaxEngineAdapter._request`` does)
+    and budgets from it are sized for the truncated prompt. At
+    ``prompt_len == max_len - 1`` the room is 1 and the budget is 1: a
+    zero-decode job. Its pinned semantics on every backend: the request
+    still holds a slot for exactly ONE service tick, because the engine's
+    finish check runs after the step's append — ``EmulatedEngine`` /
+    ``JaxEngineAdapter`` ``service_ticks`` floor at 1 accordingly. The
+    unclamped formula returned 0 or negative budgets here, which drove
+    emulated service ticks negative and desynced emulator-vs-jax parity.
+
+    THE one formula every backend must share: ``JaxEngineAdapter`` sizes
+    ``max_new_tokens`` with it, a cache-aware ``EmulatedEngine`` caps its
+    service ticks to ``max(decode_budget(...) - 1, 1)``, and the columnar
+    ``service_ticks_batch`` is its vectorized twin — computing the cap in
     two places is how the long-decode parity bug happened."""
-    plen = max(prompt_len, 1)
-    return max(min(decode_len + 1, max_len - plen), 2)
+    plen = min(max(prompt_len, 1), max_len - 1)
+    room = max_len - plen
+    return max(min(decode_len + 1, room), min(2, room))
 
 
 @dataclass
@@ -148,9 +167,11 @@ class EmulatedEngine:
         if job.decode_len > 0:
             if self.max_len is not None:
                 # cap to the cache budget exactly as the jax backend does:
-                # budget R+1 tokens = R decode steps in a slot
-                return decode_budget(job.decode_len, job.prompt_len,
-                                     self.max_len) - 1
+                # budget R+1 tokens = R decode steps in a slot; a
+                # zero-decode budget of 1 still holds the slot for one
+                # tick (the engine's finish check is post-append)
+                return max(decode_budget(job.decode_len, job.prompt_len,
+                                         self.max_len) - 1, 1)
             return job.decode_len
         return max(int(math.ceil(job.runtime / self.tick_s)), 1)
 
@@ -226,6 +247,9 @@ class JaxEngineAdapter:
         self._vocab = cfg.vocab_size
         self._ncb = cfg.n_codebooks
         self.max_len = engine.max_len
+        # a physically-paged engine's ledger, surfaced so the fleet's
+        # PartitionedEngine can cross-check its own page accounting
+        self.pager = getattr(engine, "pager", None)
         self._rng = np.random.default_rng(seed)
 
     @property
@@ -234,13 +258,18 @@ class JaxEngineAdapter:
 
     def service_ticks(self, job: Job) -> int:
         """Decode steps the engine will actually serve — the cache-capped
-        budget, so a parity harness's ``EmulatedEngine(max_len=...)``
-        agrees with the live backend on every finish tick."""
-        return decode_budget(job.decode_len, job.prompt_len,
-                             self.max_len) - 1
+        budget (floored at one tick for zero-decode jobs: the engine's
+        finish check is post-append), so a parity harness's
+        ``EmulatedEngine(max_len=...)`` agrees with the live backend on
+        every finish tick."""
+        return max(decode_budget(job.decode_len, job.prompt_len,
+                                 self.max_len) - 1, 1)
 
     def _request(self, job: Job) -> "Request":
-        plen = max(job.prompt_len, 1)
+        # prompts at/above the cache depth are truncated to max_len - 1:
+        # the budget (>= 1) then always fits, so a synthesized request can
+        # never be oversize for the engine
+        plen = min(max(job.prompt_len, 1), self.max_len - 1)
         shape = (plen,) if self._ncb <= 1 else (plen, self._ncb)
         toks = self._rng.integers(1, self._vocab, shape).astype(np.int32)
         budget = decode_budget(job.decode_len, plen, self.max_len)

@@ -40,6 +40,7 @@ class Request:
     patches: np.ndarray | None = None
     out_tokens: list = field(default_factory=list)
     done: bool = False
+    rejected: bool = False        # oversize for the cache: never admitted
 
 
 class Engine:
@@ -51,19 +52,49 @@ class Engine:
     keeps the exact-size behavior (single-tenant streams see few sizes)."""
 
     def __init__(self, lm: LM, params, rt: Runtime, *, max_batch: int,
-                 max_len: int, prefill_chunk: int | None = None):
+                 max_len: int, prefill_chunk: int | None = None,
+                 page_size: int | None = None):
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
         self.prefill_chunk = prefill_chunk
         self.lm, self.params, self.rt = lm, params, rt
         self.max_batch, self.max_len = max_batch, max_len
-        self.caches = lm.init_cache(max_batch, max_len)
+        self.page_size = page_size
         self.lengths = jnp.zeros((max_batch,), jnp.int32)
         self.active: dict[int, Request] = {}     # slot -> request
         self.free = list(range(max_batch))
-        self._decode = jax.jit(
-            lambda p, t, l, c: lm.decode(p, rt, t, l, c),
-            donate_argnums=(3,))
+        if page_size is None:
+            self.pager = None
+            self.caches = lm.init_cache(max_batch, max_len)
+            self._decode = jax.jit(
+                lambda p, t, l, c: lm.decode(p, rt, t, l, c),
+                donate_argnums=(3,))
+        else:
+            # physical paged KV: attention caches live in one shared page
+            # pool; a slot's cache is the pages its table row maps. Page 0
+            # is the reserved null page — every inactive row's table points
+            # at it, so the decode step's unconditional scatter (all rows
+            # write every step) can never corrupt a page owned by an
+            # active slot.
+            if page_size < 1 or max_len % page_size:
+                raise ValueError(
+                    f"max_len ({max_len}) must be a positive multiple of "
+                    f"page_size ({page_size})")
+            if rt.decode_kv_shard(lm.cfg) == "seq":
+                raise ValueError(
+                    "paged KV is incompatible with decode_kv_shard='seq'")
+            from repro.serve.paged import PagedKVAllocator
+            self.pages_per_slot = max_len // page_size
+            n_pages = 1 + max_batch * self.pages_per_slot
+            self.pager = PagedKVAllocator(n_pages, page_size=page_size,
+                                          reserve_null=True)
+            self.caches = lm.init_paged_cache(max_batch, n_pages, page_size)
+            self._page_table = np.zeros((max_batch, self.pages_per_slot),
+                                        np.int32)
+            self._decode = jax.jit(
+                lambda p, t, l, c, pt: lm.decode(p, rt, t, l, c,
+                                                 page_table=pt),
+                donate_argnums=(3,))
         self._prefill = {}
         self.steps = 0
         # ---- vectorized slot accounting ----
@@ -103,7 +134,36 @@ class Engine:
             src = src.astype(dst.dtype)
             start = (0, slot) + (0,) * (dst.ndim - 2)
             return jax.lax.dynamic_update_slice(dst, src, start)
-        self.caches = jax.tree.map(splice, self.caches, pre_caches)
+
+        if self.pager is None:
+            self.caches = jax.tree.map(splice, self.caches, pre_caches)
+            return
+        # paged: attention KV scatters page-sized chunks of the prefill
+        # into the slot's allocated pages; SSM state stays slot-indexed
+        ps = self.page_size
+        row = self._page_table[slot]
+
+        def splice_paged(dst, src):
+            # src (R,1,P,KVH,hd) -> page-sized chunks into
+            # dst (R,n_pages,page_size,KVH,hd) at (0, row[j], 0, 0, 0)
+            src = src.astype(dst.dtype)
+            P = src.shape[2]
+            for j0 in range(0, P, ps):
+                cs = min(ps, P - j0)
+                chunk = jax.lax.dynamic_slice_in_dim(src, j0, cs, axis=2)
+                dst = jax.lax.dynamic_update_slice(
+                    dst, chunk, (0, int(row[j0 // ps]), 0, 0, 0))
+            return dst
+
+        new = {}
+        for key, dst in self.caches.items():
+            i = int(key[3:])
+            if self.lm.cfg.block_kind(i) == "attn":
+                new[key] = tuple(splice_paged(d, s)
+                                 for d, s in zip(dst, pre_caches[key]))
+            else:
+                new[key] = jax.tree.map(splice, dst, pre_caches[key])
+        self.caches = new
 
     def admit(self, req: Request) -> bool:
         return bool(self.admit_many([req]))
@@ -119,26 +179,40 @@ class Engine:
         (``EmulatedEngine``, ``JaxEngineAdapter``, the fleet's
         ``PartitionedEngine``) returns what it admitted so
         ``ServeDriver._flush_admissions`` can requeue a truncated batch's
-        remainder instead of dropping jobs on the floor. Without
-        ``prefill_chunk`` each distinct (prompt length, group size) pair
-        JIT-specializes the prefill once — keep prompt lengths to a small
-        discrete set; with it, groups run in fixed-size (padded) chunks,
-        bounding specialization to one per prompt shape.
+        remainder instead of dropping jobs on the floor.
+
+        A request whose prompt + patches + ``max_new_tokens`` exceeds
+        ``max_len`` can never be served: it is rejected *individually*
+        (``req.rejected = req.done = True``, excluded from the returned
+        list, no slot consumed) — never raised. Raising mid-batch used to
+        abort the whole admit window, and only requests inside the free
+        window were validated at all, so an oversize request parked
+        beyond it aborted a *later* window after its slots were popped.
+
+        Without ``prefill_chunk`` each distinct (prompt length, group
+        size) pair JIT-specializes the prefill once — keep prompt lengths
+        to a small discrete set; with it, groups run in fixed-size
+        (padded) chunks, bounding specialization to one per prompt shape.
         """
-        # validate the whole batch BEFORE touching any slot: an oversize
-        # request mid-batch must not leak already-popped slots
-        for req in reqs[:len(self.free)]:
-            plen = len(req.tokens)
-            n_img = self.lm.cfg.n_patches if req.patches is not None else 0
-            if plen + n_img + req.max_new_tokens > self.max_len:
-                raise ValueError("request exceeds cache capacity")
         groups: dict[tuple[int, bool], list[tuple[int, Request]]] = {}
         admitted: list[Request] = []
         order: dict[int, int] = {}          # slot -> call-order seq
         for req in reqs:
             if not self.free:
                 break
+            plen = len(req.tokens)
+            n_img = self.lm.cfg.n_patches if req.patches is not None else 0
+            if plen + n_img + req.max_new_tokens > self.max_len:
+                req.rejected = True
+                req.done = True
+                continue
             slot = self.free.pop()
+            if self.pager is not None:
+                need = -(-(plen + n_img + req.max_new_tokens)
+                         // self.page_size)
+                pages = self.pager.alloc(slot, need)
+                self._page_table[slot] = 0
+                self._page_table[slot, :len(pages)] = pages
             order[slot] = self._seq
             self._seq += 1
             groups.setdefault((len(req.tokens), req.patches is not None),
@@ -200,8 +274,13 @@ class Engine:
         ncb = self.lm.cfg.n_codebooks
         toks = (self._last_tok[:, None] if ncb <= 1
                 else self._last_tok[:, None, :])
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(toks), self.lengths, self.caches)
+        if self.pager is None:
+            logits, self.caches = self._decode(
+                self.params, jnp.asarray(toks), self.lengths, self.caches)
+        else:
+            logits, self.caches = self._decode(
+                self.params, jnp.asarray(toks), self.lengths, self.caches,
+                jnp.asarray(self._page_table))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))  # (B,) or (B,ncb)
         mask = self._active_mask
         self._last_tok[mask] = nxt[mask]
@@ -221,17 +300,27 @@ class Engine:
             req.out_tokens = [self._out_buf[slot, i]
                               for i in range(int(self._out_len[slot]))]
             self._active_mask[slot] = False
+            if self.pager is not None:
+                self.pager.free(slot)
+                self._page_table[slot] = 0   # back to the null page
             self.free.append(slot)
             finished.append(req)
         return finished
 
     def run(self, requests: list[Request]) -> list[Request]:
-        """Serve a list of requests to completion (admitting as slots free)."""
+        """Serve a list of requests to completion (admitting as slots
+        free). Oversize requests come back in the result marked
+        ``rejected`` with no output tokens."""
         pending = list(requests)
         done: list[Request] = []
         while pending or self.active:
             if pending and self.free:
-                admitted = self.admit_many(pending[:len(self.free)])
-                del pending[:len(admitted)]
+                window = pending[:len(self.free)]
+                taken = {id(r) for r in self.admit_many(window)}
+                for req in window:
+                    if req.rejected:
+                        done.append(req)
+                        taken.add(id(req))
+                pending = [r for r in pending if id(r) not in taken]
             done.extend(self.step())
         return done

@@ -60,9 +60,10 @@ from repro.core.tre import TickClock
 from repro.core.types import Job
 from repro.serve.driver import (
     EmulatedEngine, ServeDriver, ServeInvariantError, ServeStats,
-    default_max_ticks, due_tick_floor, engine_service_ticks,
+    decode_budget, default_max_ticks, due_tick_floor, engine_service_ticks,
     replay_contention,
 )
+from repro.serve.paged import PagedKVAllocator, pages_for
 
 
 # --------------------------------------------------------------------------
@@ -120,12 +121,28 @@ class PartitionedEngine:
     ``strict=False``), and :meth:`check_isolation` re-asserts every
     tenant's ``active_slots * width <= granted`` plus
     ``sum_i(active_i * width_i) <= capacity`` at every fleet tick. An
-    all-width-1 pool is bit-identical to the unweighted partitioning."""
+    all-width-1 pool is bit-identical to the unweighted partitioning.
 
-    def __init__(self, backing, *, strict: bool = True):
+    With a ``pager`` (``PagedKVAllocator``) the isolation invariant is
+    enforced *physically* in KV-cache pages, not just slot arithmetic:
+    every admitted job allocates its cache-budget worth of pages under
+    its tenant's tag, a tenant's page quota is its live granted units
+    times ``pages_per_unit``, and :meth:`check_isolation` adds page
+    conservation + per-tenant quota sweeps. A job's page need is capped
+    at its slot's width worth of pages, so page accounting can never bind
+    tighter than the slot arithmetic — the paged fleet's admit/stat
+    behavior is field-for-field identical to the unpaged one, with the
+    ledger checked on top. When the backing engine carries its own
+    allocator (a paged ``repro.serve.engine.Engine`` under
+    ``JaxEngineAdapter``), the two ledgers' totals are cross-checked
+    every tick."""
+
+    def __init__(self, backing, *, strict: bool = True,
+                 pager: PagedKVAllocator | None = None):
         self.backing = backing
         self.capacity = backing.capacity
         self.strict = strict
+        self.pager = pager
         self.isolation_violations = 0
         self._granted = {}                  # tenant -> () -> granted units
         self._active: dict[str, int] = {}   # tenant -> active slots
@@ -151,8 +168,14 @@ class PartitionedEngine:
 
     def bind(self, tenant: str, granted) -> None:
         """Attach the tenant's granted-slot supplier (its env's live
-        ``owned`` count) — the ceiling its admits are checked against."""
+        ``owned`` count) — the ceiling its admits are checked against.
+        With a pager the same supplier prices the tenant's page quota:
+        granted units times ``pages_per_unit``."""
         self._granted[tenant] = granted
+        if self.pager is not None:
+            self.pager.set_quota(
+                tenant,
+                lambda: self.granted_of(tenant) * self.pager.pages_per_unit)
 
     # ---------------------------------------------------------- accounts
     def active_of(self, tenant: str) -> int:
@@ -232,7 +255,28 @@ class PartitionedEngine:
         for job in jobs:
             self._owner[job.jid] = tenant
             self._deferred.discard(job.jid)
+            if self.pager is not None:
+                # the slot check above passed, and a job never needs more
+                # pages than its slot's width worth — so this alloc can
+                # only fail if the ledgers disagree (an invariant error)
+                self.pager.alloc(job.jid, self._job_pages(tenant, job),
+                                 tenant=tenant)
         return list(jobs)
+
+    def _job_pages(self, tenant: str, job: Job) -> int:
+        """Pages a job's cache budget needs, capped at its slot's width
+        worth. Sized with THE shared ``decode_budget`` formula against
+        the backing engine's cache depth, so a physically-paged backing
+        engine (``Engine(page_size=...)``) reserves the same totals and
+        the two ledgers stay cross-checkable."""
+        g = self.pager
+        quota_pages = self._width[tenant] * g.pages_per_unit
+        depth = getattr(self.backing, "max_len", None)
+        if depth is None:
+            depth = quota_pages * g.page_size
+        plen = min(max(job.prompt_len, 1), depth - 1)
+        budget = decode_budget(job.decode_len, plen, depth)
+        return min(pages_for(plen + budget, g.page_size), quota_pages)
 
     # -------------------------------------------------------------- step
     def step_all(self) -> None:
@@ -242,6 +286,8 @@ class PartitionedEngine:
             tenant = self._owner.pop(jid)
             self._active[tenant] -= 1
             self._finished[tenant].append(jid)
+            if self.pager is not None:
+                self.pager.free(jid)
 
     def take_finished(self, tenant: str) -> list[int]:
         out = self._finished[tenant]
@@ -266,6 +312,17 @@ class PartitionedEngine:
             self._violate(
                 "partitions exceed the pool: %d active units > %d"
                 % (self.active_units, self.capacity))
+        if self.pager is not None:
+            # the physical form of the same invariant: pages conserved,
+            # no tenant mapping pages beyond its granted quota
+            self.pager.check_conservation()
+            backing_pager = getattr(self.backing, "pager", None)
+            if (backing_pager is not None
+                    and backing_pager.used_pages != self.pager.used_pages):
+                self._violate(
+                    "page ledger divergence: engine maps %d pages, pool "
+                    "accounts %d"
+                    % (backing_pager.used_pages, self.pager.used_pages))
 
 
 def rekey_disjoint(tenant_streams):
@@ -347,6 +404,14 @@ class ServeFleet:
         ``nodes == widths[i]`` — provider grants and env accounting are
         unit-denominated. Default: all 1 (bit-identical to the
         homogeneous fleet).
+    page_size: tokens per KV page. When set, the pool's weighted
+        isolation is enforced physically through a ``PagedKVAllocator``
+        sized at ``capacity * ceil(max_len / page_size)`` pages — every
+        admit allocates real pages under its tenant, quotas follow live
+        grants, and conservation is swept each tick. Requires the backing
+        engine to expose ``max_len`` (its cache depth prices a job's page
+        need). Stats are unchanged field-for-field; the ledger rides
+        underneath.
     """
 
     def __init__(self, tenant_streams: Sequence[Sequence[tuple[float, list[Job]]]],
@@ -360,7 +425,8 @@ class ServeFleet:
                  scheduler=None, max_ticks: int | None = None,
                  strict: bool = True, name: str = "serve-fleet",
                  widths: Sequence[int] | None = None,
-                 event_skip: bool = False):
+                 event_skip: bool = False,
+                 page_size: int | None = None):
         if not tenant_streams:
             raise ValueError("a fleet needs at least one tenant stream")
         n = len(tenant_streams)
@@ -401,7 +467,20 @@ class ServeFleet:
             f"{name}-t{i}" for i in range(n)]
         self.name = name
         self.provider = provider
-        self.pool = PartitionedEngine(engine, strict=strict)
+        if page_size is not None:
+            depth = getattr(engine, "max_len", None)
+            if depth is None:
+                raise ValueError(
+                    "page_size needs an engine with a max_len cache depth "
+                    "to price page quotas (EmulatedEngine(max_len=...) or "
+                    "a paged jax engine)")
+            ppu = -(-int(depth) // int(page_size))
+            pager = PagedKVAllocator(engine.capacity * ppu,
+                                     page_size=int(page_size),
+                                     pages_per_unit=ppu)
+        else:
+            pager = None
+        self.pool = PartitionedEngine(engine, strict=strict, pager=pager)
         self.clock = TickClock()
         self.tick_s = tick_s
         self.strict = strict

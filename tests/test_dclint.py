@@ -180,7 +180,34 @@ def test_dc401_flags_unweighted_slot_unit_compare(tmp_path):
                 return self.active_slots + self.granted
         """)
     assert codes(vs) == ["DC401", "DC401"]
-    assert "width conversion" in vs[0].message
+    assert "slot-count" in vs[0].message
+    assert "node-unit" in vs[0].message
+
+
+def test_dc401_flags_unconverted_page_mixes(tmp_path):
+    vs = run_on(tmp_path, "src/repro/serve/x.py", """\
+        class D:
+            def check(self):
+                if self.pager.used_pages > self.env.granted:
+                    raise RuntimeError
+                return self.free_pages - self.engine.active_count
+        """)
+    assert codes(vs) == ["DC401", "DC401"]
+    assert "page-count" in vs[0].message
+
+
+def test_dc401_passes_page_rate_weighted_comparison(tmp_path):
+    vs = run_on(tmp_path, "src/repro/serve/x.py", """\
+        class D:
+            def check(self, tenant):
+                quota = self.env.granted * self.pager.pages_per_unit
+                if self.pager.used_pages > quota:
+                    raise RuntimeError
+                rate = self.width_of(tenant) * self.pager.pages_per_unit
+                need = self.engine.active_count * rate
+                return need + self.pager.used_pages
+        """)
+    assert vs == []
 
 
 def test_dc401_passes_width_weighted_comparison(tmp_path):

@@ -53,10 +53,15 @@ def test_batching_does_not_change_results(granite_engine):
 
 
 def test_engine_rejects_oversized_request(granite_engine):
+    """Oversize requests are rejected individually, never raised: the
+    request comes back marked ``rejected`` with no output and the engine
+    keeps its slot free for admissible work."""
     lm, params, rt = granite_engine
     eng = Engine(lm, params, rt, max_batch=1, max_len=16)
-    with pytest.raises(ValueError):
-        eng.admit(_req(0, plen=14, n=8))
+    req = _req(0, plen=14, n=8)
+    assert not eng.admit(req)
+    assert req.rejected and req.done and not req.out_tokens
+    assert len(eng.free) == 1 and not eng.active
 
 
 def test_controller_runs_queue_with_failures(tmp_path):

@@ -567,21 +567,36 @@ def test_chunked_prefill_matches_unchunked_and_bounds_jit(musicgen_engine):
     assert len(eng.free) == 4 and not eng.active
 
 
-def test_admit_many_oversize_raises_without_leaking_slots(musicgen_engine):
-    """An oversize request anywhere in the batch must fail the call
-    before any slot is consumed (no capacity leak, no half-admits)."""
+def test_admit_many_oversize_rejected_individually(musicgen_engine):
+    """An oversize request anywhere in the batch is rejected on its own
+    (``rejected = done = True``, no slot consumed, excluded from the
+    returned admitted list) and NEVER aborts the rest of the window —
+    the returned-subset contract ``ServeDriver._flush_admissions``
+    relies on. The old behavior raised mid-batch, and only validated
+    ``reqs[:len(free)]``, so an oversize request parked beyond the free
+    window aborted a later admit window instead."""
     from repro.serve.engine import Request
 
     eng = musicgen_engine
     ncb = eng.lm.cfg.n_codebooks
     r = np.random.default_rng(5)
-    ok = Request(rid=0, tokens=r.integers(1, eng.lm.cfg.vocab_size,
-                                          (4, ncb)).astype(np.int32),
-                 max_new_tokens=3)
-    oversize = Request(rid=1, tokens=r.integers(1, eng.lm.cfg.vocab_size,
-                                                (40, ncb)).astype(np.int32),
-                       max_new_tokens=40)
+
+    def req(rid, plen, new):
+        return Request(rid=rid, tokens=r.integers(
+            1, eng.lm.cfg.vocab_size, (plen, ncb)).astype(np.int32),
+            max_new_tokens=new)
+
+    ok, oversize, ok2 = req(0, 4, 3), req(1, 40, 40), req(2, 6, 2)
     free_before = len(eng.free)
-    with pytest.raises(ValueError, match="cache capacity"):
-        eng.admit_many([ok, oversize])
+    admitted = eng.admit_many([ok, oversize, ok2])
+    assert [q.rid for q in admitted] == [0, 2]
+    assert oversize.rejected and oversize.done and not oversize.out_tokens
+    assert not ok.rejected and not ok2.rejected
+    assert len(eng.free) == free_before - 2
+    done = eng.run([])
+    assert sorted(q.rid for q in done) == [0, 2]
     assert len(eng.free) == free_before and not eng.active
+    # run() surfaces rejects in its result instead of spinning on them
+    done = eng.run([req(3, 4, 3), req(4, 40, 40)])
+    assert sorted(q.rid for q in done) == [3, 4]
+    assert next(q for q in done if q.rid == 4).rejected

@@ -50,6 +50,17 @@ WIDTH_NAMES = frozenset({"width", "slot_width"})
 WIDTH_SUFFIXES = ("_width",)
 # Calls treated as width-valued regardless of receiver
 WIDTH_CALLS = frozenset({"width_of"})
+# Page counts: physical KV-cache pages (PR 8's paged allocator). Slots,
+# units and pages are three distinct denominations; any two of them may
+# only meet through a converter.
+PAGE_NAMES = frozenset({"n_pages", "pages", "used_pages", "free_pages",
+                        "capacity_pages", "page_quota"})
+PAGE_SUFFIXES = ("_pages",)
+# Page rates: the sanctioned converters into page space. Multiplying a
+# slot or unit count by a rate yields pages (``granted * pages_per_unit``);
+# a width times a per-unit rate is a per-slot rate.
+RATE_NAMES = frozenset({"pages_per_slot", "pages_per_unit"})
+RATE_SUFFIXES = ("_per_slot", "_per_unit")
 
 
 def relpath(path: Path, root: Path) -> str:

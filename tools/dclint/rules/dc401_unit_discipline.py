@@ -1,28 +1,34 @@
-"""DC401 — slot counts and node units must not mix without a width.
+"""DC401 — slot, unit and page quantities must not mix unconverted.
 
 Since PR 5, provider grants, ``RuntimeEnv.owned``/``busy`` and task
 ``nodes`` are denominated in *node units* while engines count *batching
 slots*; a slot of a width-``w`` tenant costs ``w`` units. The PR 5 bug
 class was exactly `active_slots <= granted_units` comparisons that were
-only correct at width 1. This rule classifies identifiers by lexicon
-(``tools.dclint.config``: ``active``/``*_slots`` are slots; ``owned``/
-``granted``/``capacity``/``*_units``/``*_nodes`` are units; ``width``/
-``*_width`` are converters) and flags additive arithmetic or comparisons
-whose operands classify as SLOT on one side and UNIT on the other.
+only correct at width 1. PR 8 adds a third denomination: physical
+KV-cache *pages* (``used_pages``, ``n_pages``...), reached from slots or
+units through a page rate (``pages_per_slot``, ``pages_per_unit``).
 
-Multiplying a slot quantity by a width converts it to units (and
-dividing units by a width converts back); local assignments propagate
-the classification, so::
+This rule classifies identifiers by lexicon (``tools.dclint.config``)
+and flags additive arithmetic or comparisons whose operands classify as
+two *different* count denominations (slot/unit, slot/page or unit/page).
+
+Conversions are multiplicative: a slot count times a width is units,
+dividing units by a width goes back; a slot or unit count times a page
+rate is pages, and a width times a per-unit rate is a per-slot rate.
+Local assignments propagate the classification, so::
 
     active = self.engine.active_count * self.slot_width   # -> UNIT
     if active > self.env.owned:                           # ok
+    quota = self.env.granted * self.pager.pages_per_unit  # -> PAGE
+    if self.pager.used_pages > quota:                     # ok
 
-passes, while::
+pass, while::
 
     if self.engine.active_count > self.env.owned:         # DC401
+    if self.pager.used_pages > self.env.granted:          # DC401
 
-is flagged. Fix pattern: weight by the tenant's width (or route through
-a ``width_of(...)`` helper) before comparing.
+are flagged. Fix pattern: weight by the tenant's width or page rate (or
+route through a ``width_of(...)`` helper) before comparing.
 """
 from __future__ import annotations
 
@@ -31,15 +37,21 @@ import ast
 from tools.dclint import config
 
 CODE = "DC401"
-SUMMARY = ("slot-count and node-unit quantities mixed without a width "
-           "conversion")
+SUMMARY = ("slot-count, node-unit and page-count quantities mixed without "
+           "a width or page-rate conversion")
 
 SLOT, UNIT, WIDTH = "slot-count", "node-unit", "width"
+PAGE, RATE = "page-count", "page-rate"
+_COUNTS = (SLOT, UNIT, PAGE)
 
 
 def _lex(name: str) -> str | None:
+    if name in config.RATE_NAMES or name.endswith(config.RATE_SUFFIXES):
+        return RATE
     if name in config.WIDTH_NAMES or name.endswith(config.WIDTH_SUFFIXES):
         return WIDTH
+    if name in config.PAGE_NAMES or name.endswith(config.PAGE_SUFFIXES):
+        return PAGE
     if name in config.SLOT_NAMES or name.endswith(config.SLOT_SUFFIXES):
         return SLOT
     if name in config.UNIT_NAMES or name.endswith(config.UNIT_SUFFIXES):
@@ -48,7 +60,7 @@ def _lex(name: str) -> str | None:
 
 
 def _mix(a: str | None, b: str | None) -> bool:
-    return {a, b} == {SLOT, UNIT}
+    return a != b and a in _COUNTS and b in _COUNTS
 
 
 class _FnChecker(ast.NodeVisitor):
@@ -86,9 +98,20 @@ class _FnChecker(ast.NodeVisitor):
             left = self.classify(node.left)
             right = self.classify(node.right)
             if isinstance(node.op, ast.Mult):
+                if RATE in (left, right):
+                    other = right if left == RATE else left
+                    if other in (SLOT, UNIT):
+                        return PAGE          # count * pages-per-count
+                    if other == WIDTH:
+                        return RATE          # units/slot * pages/unit
+                    return None
                 if WIDTH in (left, right):
                     other = right if left == WIDTH else left
-                    return WIDTH if other == WIDTH else UNIT
+                    if other == WIDTH:
+                        return WIDTH
+                    return PAGE if other == PAGE else UNIT
+                if PAGE in (left, right):
+                    return PAGE
                 if UNIT in (left, right):
                     return UNIT
                 if SLOT in (left, right):
@@ -97,11 +120,15 @@ class _FnChecker(ast.NodeVisitor):
             if isinstance(node.op, (ast.Div, ast.FloorDiv)):
                 if left == UNIT and right == WIDTH:
                     return SLOT
+                if left == PAGE and right == RATE:
+                    # pages / pages_per_X -> X; which X is ambiguous here
+                    return None
                 return left
             if isinstance(node.op, (ast.Add, ast.Sub)):
                 if _mix(left, right):
                     self.report(node, left, right)
-                return (UNIT if UNIT in (left, right)
+                return (PAGE if PAGE in (left, right)
+                        else UNIT if UNIT in (left, right)
                         else SLOT if SLOT in (left, right) else None)
             return None
         return None
@@ -171,9 +198,9 @@ def check(tree: ast.AST, src_lines: list[str], rel: str):
         if len(expr) > 60:
             expr = expr[:57] + "..."
         found.append((node.lineno, node.col_offset,
-                      f"`{expr}` mixes a {SLOT} with a {UNIT} without a "
-                      f"width conversion (multiply slots by the tenant "
-                      f"width, or divide units by it, first)"))
+                      f"`{expr}` mixes a {a} with a {b} without a "
+                      f"conversion (weight by the tenant width or page "
+                      f"rate so both sides share a denomination)"))
 
     for node in ast.walk(tree):
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):

@@ -8,6 +8,8 @@ config (``repro.configs.registry``):
 - ``flash_attention``: (BH,S,hd) x (BH,Sk,hd)^2 -> (BH,S,hd), q dtype
 - ``decode_attention``: (B,H,hd) x (B,S,KVH,hd)^2 + (B,) lengths
   -> (B,H,hd), q dtype
+- ``paged_decode_attention``: (B,H,hd) x (NP,ps,KVH,hd)^2 pools +
+  (B,n_pt) page table + (B,) lengths -> (B,H,hd), q dtype
 - ``moe_gmm`` (MoE configs): (E,C,d) x (E,d,f) -> (E,C,f), x dtype
 - ``ssd_scan`` (SSM/hybrid configs): (B,S,nh,hp)... -> y (B,S,nh,hp)
   fp32 + state (B,nh,hp,ds) fp32
@@ -32,6 +34,7 @@ def _checks(cfg):
     from repro.kernels.decode_attention import decode_attention
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.moe_gmm import moe_gmm
+    from repro.kernels.paged_decode_attention import paged_decode_attention
     from repro.kernels.ssd_scan import ssd_scan
 
     S = jax.ShapeDtypeStruct
@@ -52,6 +55,14 @@ def _checks(cfg):
                lambda q, k, v, l: decode_attention(
                    q, k, v, l, block_s=32, interpret=True),
                (dq, cache, cache, lengths), [((BATCH, H, hd), dtype)])
+        ps, n_pt = 32, SEQ // 32
+        pool = S((BATCH * n_pt + 1, ps, KVH, hd), dtype)
+        ptab = S((BATCH, n_pt), jnp.int32)
+        yield ("paged_decode_attention",
+               lambda q, k, v, pt, l: paged_decode_attention(
+                   q, k, v, pt, l, interpret=True),
+               (dq, pool, pool, ptab, lengths),
+               [((BATCH, H, hd), dtype)])
         if cfg.moe and cfg.n_experts:
             E, C = cfg.n_experts, 32
             x = S((E, C, cfg.d_model), dtype)
