@@ -119,6 +119,23 @@ SPECS: dict[str, dict] = {
         },
         "tol_mult": {"workflows_per_sec": 4.0},
     },
+    "train_serve": {
+        # mixed train+serve consolidation: completion and isolation are
+        # invariants (every serve workflow, every training step, zero
+        # violations, every preemption resumed), the billing ratio gates
+        # directionally like the serve fleet's
+        "rows": lambda d: d["runs"],
+        "key": ("mix", "n_tenants", "train_jobs"),
+        "metrics": {
+            "billed_vs_dedicated": "lower",
+            "serve_incomplete": "zero",
+            "train_steps_incomplete": "zero",
+            "unresumed_preemptions": "zero",
+            "over_admissions": "zero",
+            "isolation_violations": "zero",
+            "slot_utilization": "higher",
+        },
+    },
     "serve_scale": {
         # columnar-vs-scalar throughput at 1e5 workflows; rows keyed by
         # execution mode. ``stats_mismatches`` only exists on the

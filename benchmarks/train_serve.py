@@ -1,0 +1,260 @@
+"""Train+serve consolidation benchmark: does preemptible HTC training
+soaking the serve troughs push consolidated billing below dedicated pools
+WITHOUT violating serve isolation?
+
+The paper's economies-of-scale claim (§2, §5) is about consolidating
+heterogeneous workloads on one platform; ``benchmarks/serve_fleet.py``
+answers it for N MTC serve tenants, this benchmark adds the HTC species:
+gang-scheduled elastic training tenants (``repro.serve.tenant.
+TrainTenant``) sharing the provider pool with the serve lanes through the
+``dawningcloud-train-serve`` scenario. Training gangs grow into serve
+troughs (elastic up to each job's ``world_max``), checkpoint-and-vacate
+when serve demand parks in the admission queue, and resume from the last
+checkpoint — so every cell reports the churn (preemptions / resumes /
+rollback steps) next to the billing.
+
+Each cell compares:
+
+  - **consolidated**: serve streams + one training tenant on ONE pool
+    (capacity = the serve plan + the training gang floor);
+  - **dedicated**: each serve tenant on its own fixed width-sized engine
+    (the ``serve_fleet.py`` baseline) PLUS a dedicated training pool of
+    ``max(world_max)`` nodes driven standalone through the same tenant
+    hooks (``drive_tenant``).
+
+Hard gates (``_require``): every serve workflow AND every training step
+completes, zero isolation violations / over-admissions, every preemption
+eventually resumes, and consolidated billing lands under dedicated.
+``benchmarks/check_regression.py`` gates the emitted
+``BENCH_train_serve.json`` against the committed baseline + history.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.policy import MgmtPolicy
+from repro.core.provision import ProvisionService
+from repro.serve.fleet import TrainServeFleetSystem
+from repro.serve.tenant import TrainTenant, TrainTenantSpec, drive_tenant
+from repro.sim.traces import TRAIN_PROFILES, train_stream
+
+from serve_fleet import (  # noqa: E402  (sibling benchmark module)
+    _require, eager_peak_slots, parse_mix, tenant_streams,
+)
+from repro.serve.driver import EmulatedEngine, ServeDriver
+
+
+def run_dedicated_serve(streams, widths, *, policy: MgmtPolicy) -> dict:
+    """N dedicated serve engines, one per tenant (the ``serve_fleet.py``
+    baseline shape): fixed width-sized slots, no negotiation."""
+    total = {"node_hours": 0.0, "slots": 0, "workflows": 0}
+    for i, (stream, w) in enumerate(zip(streams, widths)):
+        slots = max(eager_peak_slots(stream), policy.initial)
+        drv = ServeDriver(stream, provider=ProvisionService(),
+                          engine=EmulatedEngine(slots),
+                          fixed_nodes=slots * w, slot_width=w,
+                          name=f"dedicated-t{i}")
+        st = drv.run()
+        _require(st.workflows_completed == st.workflows_expected,
+                 f"dedicated serve tenant {i} completed "
+                 f"{st.workflows_completed}/{st.workflows_expected}")
+        total["node_hours"] += st.node_hours
+        total["slots"] += slots * w
+        total["workflows"] += st.workflows_completed
+    return total
+
+
+def run_dedicated_train(jobs) -> dict:
+    """A dedicated HTC training pool: fixed nodes sized at the widest
+    gang's ``world_max`` (jobs queue behind each other but every gang can
+    reach its full elastic width), driven standalone through the same
+    ``Tenant`` hooks the fleet uses. Never preempted — nothing shares the
+    pool — so its billing is the pure cost of NOT consolidating."""
+    cap = max(j.world_max for j in jobs)
+    tenant = TrainTenant(jobs, provider=ProvisionService(),
+                         fixed_nodes=cap, name="dedicated-train")
+    st = drive_tenant(tenant)
+    _require(st.jobs_completed == st.jobs_expected,
+             f"dedicated train completed {st.jobs_completed}"
+             f"/{st.jobs_expected} jobs")
+    _require(st.steps_done == st.steps_expected,
+             f"dedicated train ran {st.steps_done}"
+             f"/{st.steps_expected} steps")
+    _require(st.preemptions == 0,
+             f"dedicated train pool preempted itself {st.preemptions}x")
+    return {"node_hours": st.node_hours, "nodes": cap,
+            "makespan_s": st.makespan_s,
+            "slot_utilization": st.slot_utilization}
+
+
+def run_cell(mix_spec: str, n_serve: int, n_train: int, *,
+             workflows: int, seed: int, jobs_scale: float,
+             period: float, train_period: float,
+             train_scan_s: float = 60.0,
+             event_skip: bool = True) -> dict:
+    """One (mix, N serve tenants, M training jobs) consolidation cell.
+
+    ``train_scan_s`` is the training tenant's management cadence (scan =
+    yield check). The full-size sweep keeps the HTC default (60 s); the
+    smoke compresses the arrival windows, so it compresses the cadence
+    with them — that is what lets a CI-sized cell still exercise the
+    grow-into-trough / preempt-on-burst cycle.
+    """
+    mix = parse_mix(mix_spec)
+    streams, widths = tenant_streams(n_serve, workflows, seed, jobs_scale,
+                                     period, mix=mix)
+    jobs = train_stream(n_train, seed=seed + 17, period=train_period)
+    floor = max(j.world_min for j in jobs)
+    spec = TrainTenantSpec(
+        jobs=tuple(jobs),
+        policy=MgmtPolicy(initial=floor, ratio=2.0,
+                          scan_interval=train_scan_s,
+                          release_interval=3600.0),
+        preempt_check_s=train_scan_s)
+    system = TrainServeFleetSystem()
+
+    t0 = time.perf_counter()
+    fs = system.serve(streams, train_specs=[spec], widths=widths,
+                      event_skip=event_skip,
+                      name=f"train-serve-n{n_serve}-m{n_train}")
+    wall = time.perf_counter() - t0
+
+    train_rows = [t for t in fs.tenants if "steps_expected" in t]
+    _require(len(train_rows) == 1, "expected exactly one training tenant")
+    tr = train_rows[0]
+
+    _require(fs.workflows_completed == fs.workflows_expected,
+             f"consolidated serve completed {fs.workflows_completed}"
+             f"/{fs.workflows_expected} workflows (mix={mix_spec})")
+    _require(fs.over_admissions == 0,
+             f"over-admissions: {fs.over_admissions}")
+    _require(fs.isolation_violations == 0,
+             f"isolation violations: {fs.isolation_violations}")
+    _require(tr["jobs_completed"] == tr["jobs_expected"],
+             f"training completed {tr['jobs_completed']}"
+             f"/{tr['jobs_expected']} jobs")
+    _require(tr["steps_done"] == tr["steps_expected"],
+             f"training ran {tr['steps_done']}/{tr['steps_expected']} steps")
+    _require(tr["preemptions"] == tr["resumes"],
+             f"{tr['preemptions']} preemptions but {tr['resumes']} resumes "
+             f"— a vacated gang never relaunched")
+
+    # identical inputs, separate pools
+    streams, widths = tenant_streams(n_serve, workflows, seed, jobs_scale,
+                                     period, mix=mix)
+    jobs = train_stream(n_train, seed=seed + 17, period=train_period)
+    ded_serve = run_dedicated_serve(streams, widths,
+                                    policy=system.default_policy())
+    ded_train = run_dedicated_train(jobs)
+    ded_hours = ded_serve["node_hours"] + ded_train["node_hours"]
+
+    row = {
+        "mix": mix_spec,
+        "n_tenants": n_serve,
+        "train_jobs": n_train,
+        "widths": widths,
+        "capacity": fs.capacity,
+        "workflows": fs.workflows_completed,
+        "serve_incomplete": fs.workflows_expected - fs.workflows_completed,
+        "train_steps": tr["steps_done"],
+        "train_steps_incomplete": tr["steps_expected"] - tr["steps_done"],
+        "preemptions": tr["preemptions"],
+        "resumes": tr["resumes"],
+        "unresumed_preemptions": tr["preemptions"] - tr["resumes"],
+        "rollback_steps": tr["rollback_steps"],
+        "grow_nodes": tr["grow_nodes"],
+        "shrink_nodes": tr["shrink_nodes"],
+        "train_peak_owned": tr["peak_owned"],
+        "train_busy_node_ticks": tr["busy_node_ticks"],
+        "billed_node_hours": fs.node_hours,
+        "dedicated_node_hours": ded_hours,
+        "dedicated_serve_node_hours": ded_serve["node_hours"],
+        "dedicated_train_node_hours": ded_train["node_hours"],
+        "billed_vs_dedicated": fs.node_hours / max(ded_hours, 1e-12),
+        "slot_utilization": fs.slot_utilization,
+        "pool_utilization": fs.pool_utilization,
+        "over_admissions": fs.over_admissions,
+        "isolation_violations": fs.isolation_violations,
+        "makespan_s": fs.makespan_s,
+        "wall_s": wall,
+    }
+    _require(row["billed_vs_dedicated"] < 1.0,
+             f"consolidated train+serve bills "
+             f"{row['billed_vs_dedicated']:.2f}x dedicated "
+             f"(mix={mix_spec} N={n_serve} M={n_train})")
+    return row
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tenants", type=int, default=3,
+                    help="serve tenants per cell")
+    ap.add_argument("--train-jobs", type=int, nargs="+", default=[2, 4, 8],
+                    help="training-job counts to sweep (the trough-soak "
+                         "curve axis)")
+    ap.add_argument("--workflows", type=int, default=12,
+                    help="workflows per serve tenant")
+    ap.add_argument("--jobs-scale", type=float, default=0.04)
+    ap.add_argument("--period", type=float, default=3600.0,
+                    help="serve arrival window (s)")
+    ap.add_argument("--train-period", type=float, default=7200.0,
+                    help="training arrival window (s)")
+    ap.add_argument("--train-scan", type=float, default=60.0,
+                    help="training tenant scan/yield cadence (s)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mixes", nargs="+", default=["1/2/4"],
+                    help="serve width mixes (cycled across tenants)")
+    ap.add_argument("--no-event-skip", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep: fewer jobs, smaller mosaics")
+    ap.add_argument("--out", default="BENCH_train_serve.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.tenants = 3
+        args.train_jobs = [2, 8]
+        args.workflows = 6
+        args.jobs_scale = 0.04
+        args.period = 1800.0
+        args.train_period = 3600.0
+        args.train_scan = 6.0   # cadence compressed with the windows
+
+    runs = [run_cell(mix_spec, args.tenants, m,
+                     workflows=args.workflows, seed=args.seed,
+                     jobs_scale=args.jobs_scale, period=args.period,
+                     train_period=args.train_period,
+                     train_scan_s=args.train_scan,
+                     event_skip=not args.no_event_skip)
+            for mix_spec in args.mixes for m in args.train_jobs]
+
+    out = {
+        "benchmark": "train_serve",
+        "config": {"tenants": args.tenants, "train_jobs": args.train_jobs,
+                   "workflows": args.workflows,
+                   "jobs_scale": args.jobs_scale, "period_s": args.period,
+                   "train_period_s": args.train_period,
+                   "train_scan_s": args.train_scan, "seed": args.seed,
+                   "mixes": args.mixes, "smoke": args.smoke,
+                   "train_profiles": sorted(TRAIN_PROFILES)},
+        "runs": runs,
+    }
+    with open(args.out, "w") as fh:
+        json.dump(out, fh, indent=2)
+    print(f"wrote {args.out} ({len(runs)} cells)")
+    for r in runs:
+        print(f"  mix={r['mix']:>6s} M={r['train_jobs']} "
+              f"billed/dedic={r['billed_vs_dedicated']:.3f} "
+              f"steps={r['train_steps']} preempt={r['preemptions']} "
+              f"rollback={r['rollback_steps']} "
+              f"iso={r['isolation_violations']} wall={r['wall_s']:.2f}s")
+    return out
+
+
+if __name__ == "__main__":
+    main()

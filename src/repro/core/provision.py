@@ -105,6 +105,12 @@ class ProvisionService:
         self.open_leases: dict[str, list[Lease]] = {}
         self.closed_leases: list[Lease] = []
         self.adjust_events: list[AdjustEvent] = []
+        # preemption ledger: nodes reclaimed from (negative delta) and
+        # resumed to (positive delta) preemptible tenants — the lease
+        # checkpoint/resume bookkeeping the train+serve consolidation
+        # bench audits (how much churn did trough-soaking cost?)
+        self.preempt_events: list[AdjustEvent] = []
+        self.resume_events: list[AdjustEvent] = []
         self._alloc_curve: list[tuple[float, int]] = [(0.0, 0)]
         # columnar mirror of closed_leases (appended in lockstep by
         # _close) so the vectorized accounting never walks Lease objects
@@ -246,6 +252,39 @@ class ProvisionService:
         n = self.allocated.get(tre, 0)
         if n:
             self.release(tre, n, t, count_adjust=count_adjust)
+
+    # ------------------------------------------------- preemption ledger
+    def preempt(self, tre: str, n: int, t: float, *,
+                count_adjust: bool = True) -> None:
+        """Release ``n`` nodes a preemptible tenant vacated for foreign
+        demand. Lease mechanics are a plain :meth:`release` (newest
+        blocks close first — the dynamic blocks a training gang grew
+        into); the separate ledger entry is what distinguishes *forced*
+        churn from a tenant's own idle-release cadence."""
+        if n <= 0:
+            return
+        self.preempt_events.append(AdjustEvent(t, tre, -n))
+        self.release(tre, n, t, count_adjust=count_adjust)
+
+    def record_resume(self, tre: str, n: int, t: float) -> None:
+        """Record a preempted tenant relaunching ``n`` nodes' worth of
+        work from its checkpoint (the grant itself came through the
+        normal request path — this is ledger-only)."""
+        if n <= 0:
+            return
+        self.resume_events.append(AdjustEvent(t, tre, n))
+
+    def preempt_count(self, tre: str | None = None) -> int:
+        return sum(1 for e in self.preempt_events
+                   if tre is None or e.tre == tre)
+
+    def preempted_nodes(self, tre: str | None = None) -> int:
+        return sum(-e.delta for e in self.preempt_events
+                   if tre is None or e.tre == tre)
+
+    def resume_count(self, tre: str | None = None) -> int:
+        return sum(1 for e in self.resume_events
+                   if tre is None or e.tre == tre)
 
     # ---------------------------------------------------------- metrics
     def _iter_leases(self, tre: str | None):

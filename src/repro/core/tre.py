@@ -373,6 +373,46 @@ class RuntimeEnv:
         self._release_t = t
         return rel
 
+    def acquire(self, n: int) -> None:
+        """Commit ``n`` directly-granted nodes (a ``provision.request``
+        outside the scan path has already succeeded — e.g. a training
+        tenant growing a gang into a trough): registers the dynamic
+        block with the policy engine and keeps the idle integral exact,
+        the same bookkeeping order as :meth:`_apply_grant`."""
+        if n <= 0 or self.destroyed:
+            return
+        self._account_idle()
+        if self.engine is not None:
+            self.engine.granted(n)
+        self.owned += n
+
+    def yield_nodes(self, limit: int | None = None) -> int:
+        """Preemption support: immediately release free dynamic blocks.
+        Unlike :meth:`release_check` this reads the *instantaneous* free
+        count, not the window-averaged idle — the caller has just
+        vacated the nodes on purpose (checkpointed gangs shrunk away for
+        foreign demand) and they must reach the provider's admission
+        queue now, not at the next release window. Goes through
+        ``provision.preempt`` so the lease ledger records forced churn
+        separately from idle releases. Returns the nodes released."""
+        if self.destroyed or self.engine is None:
+            return 0
+        self._account_idle()
+        avail = self.free if limit is None else min(self.free, limit)
+        rel = self.engine.release_check(int(avail))
+        t = self.clock.now()
+        if rel > 0:
+            # owned shrinks BEFORE the provider call for the same drain
+            # re-entrancy reason as release_check above
+            self.owned -= rel
+            self.provision.preempt(self.name, rel, t,
+                                   count_adjust=self.count_adjust)
+        # the vacated nodes are gone — they must not ALSO count toward
+        # the next scheduled idle-release window
+        self._idle_acc = 0.0
+        self._release_t = t
+        return rel
+
     # ---------------------------------------------------- elastic hooks
     def grow(self, task: Any, extra: int) -> None:
         """Beyond-paper: a live driver widens a *running* task into spare

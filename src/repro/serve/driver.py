@@ -46,6 +46,9 @@ from repro.core.policy import MgmtPolicy
 from repro.core.provision import ProvisionService
 from repro.core.tre import MTCRuntimeEnv, TickClock
 from repro.core.types import Job
+# the tick-grid helpers moved to the tenant module with the protocol
+# extraction; re-exported here for the fleet/columnar/test importers
+from repro.serve.tenant import Tenant, due_tick_floor, next_boundary  # noqa: F401
 
 
 class ServeInvariantError(RuntimeError):
@@ -316,28 +319,6 @@ def default_max_ticks(stream, engine, tick_s: float) -> int:
     return int(span / tick_s + 8 * work + 36_000)
 
 
-def due_tick_floor(t: float, tick_s: float) -> int:
-    """A tick index guaranteed *not later* than the tick at which a
-    timestamp ``t`` comes due under the serve loop's ``t <= now + 1e-9``
-    check. ``floor`` (vs the exact ``ceil``) concedes at most one tick
-    when ``t`` sits on the grid, in exchange for a one-sided guarantee
-    that holds even as the accumulated ``TickClock`` drifts from
-    ``k * tick_s`` by float error: event-skipping may land *early* (the
-    tick is then a no-op and the loop resumes normal stepping) but can
-    never jump *past* the event."""
-    return int(math.floor((t - 1e-9) / tick_s))
-
-
-def next_boundary(k: int, every: int, phase: int) -> int:
-    """Smallest tick index > ``k`` on the ``k % every == phase % every``
-    control-cycle grid (scan/release boundaries)."""
-    r = phase % every
-    k2 = (k // every) * every + r
-    while k2 <= k:
-        k2 += every
-    return k2
-
-
 def replay_contention(provider, contention, i: int, now: float,
                       strict: bool) -> int:
     """Replay scripted co-tenant load events due at ``now`` (positive
@@ -359,8 +340,13 @@ def replay_contention(provider, contention, i: int, now: float,
     return i
 
 
-class ServeDriver:
+class ServeDriver(Tenant):
     """Replay a workflow arrival stream through one MTC TRE at trace rate.
+    The MTC serve species of the ``repro.serve.tenant.Tenant`` contract:
+    the protocol hooks alias the serve-specific phase methods below (see
+    the ``Tenant protocol`` section), which subclasses like
+    ``ColumnarServeDriver`` override *by name* — the aliases dispatch
+    virtually, so the columnar driver inherits the protocol for free.
 
     stream: ``[(arrival_t, jobs), ...]`` from ``traces.request_stream``
         (globally unique jids, deps remapped, token-length marks).
@@ -637,6 +623,57 @@ class ServeDriver:
         self._flush_admissions()
         self._check_invariants()
         self._accumulate()
+
+    # ------------------------------------- Tenant protocol (serve species)
+    # ``ServeFleet`` drives lanes through these hooks; they alias the
+    # serve phase methods above, which subclasses override by name, so
+    # the protocol costs one virtual dispatch and zero behavior change.
+    @property
+    def name(self) -> str:
+        return self.env.name
+
+    def begin_tick(self, now: float) -> None:
+        self._submit_arrivals(now)
+
+    def pre_step(self, k: int) -> None:
+        self._maybe_release(k)
+
+    def post_step(self, k: int) -> None:
+        self._process_finishes(self.engine.step())
+
+    def control(self, k: int) -> None:
+        self._maybe_scan(k)
+
+    def flush(self) -> None:
+        self._flush_admissions()
+
+    def check_invariants(self) -> None:
+        self._check_invariants()
+
+    def accumulate(self) -> None:
+        self._accumulate()
+
+    @property
+    def retired(self) -> bool:
+        return self._done
+
+    def skip_quiet_stats(self, dq: int) -> None:
+        """The stats half of :meth:`_skip_quiet` — the fleet advances
+        the shared pool and clock itself."""
+        self.stats.busy_node_ticks += self.env.busy * self.tick_s * dq
+        self.stats.owned_node_ticks += self.env.owned * self.tick_s * dq
+
+    def rollup(self, fleet_stats) -> None:
+        ls = self.stats
+        fleet_stats.workflows_completed += ls.workflows_completed
+        fleet_stats.tasks_completed += ls.tasks_completed
+        fleet_stats.busy_node_ticks += ls.busy_node_ticks
+        fleet_stats.owned_node_ticks += ls.owned_node_ticks
+        fleet_stats.node_hours += ls.node_hours
+        fleet_stats.deferred_grants += ls.deferred_grants
+        fleet_stats.deferred_nodes += ls.deferred_nodes
+        fleet_stats.over_admissions += ls.over_admissions
+        fleet_stats.tenants.append(ls.as_dict())
 
     # -------------------------------------------------------------- run
     def finalize(self, ticks: int) -> ServeStats:

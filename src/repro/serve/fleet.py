@@ -64,6 +64,7 @@ from repro.serve.driver import (
     replay_contention,
 )
 from repro.serve.paged import PagedKVAllocator, pages_for
+from repro.serve.tenant import Tenant, TrainTenant, TrainTenantSpec
 
 
 # --------------------------------------------------------------------------
@@ -150,6 +151,9 @@ class PartitionedEngine:
         self._owner: dict[int, str] = {}    # active jid -> tenant
         self._finished: dict[str, list[int]] = {}
         self._deferred: set[int] = set()    # jids truncated (counted once)
+        # non-engine pool consumers (training tenants' gang-held nodes):
+        # name -> () -> live node units, counted in the capacity sweep
+        self._external: dict = {}
 
     # ------------------------------------------------------------ wiring
     def view(self, tenant: str, width: int = 1) -> TenantSlice:
@@ -176,6 +180,21 @@ class PartitionedEngine:
             self.pager.set_quota(
                 tenant,
                 lambda: self.granted_of(tenant) * self.pager.pages_per_unit)
+
+    def attach_external(self, name: str, units) -> None:
+        """Register a pool consumer that holds nodes WITHOUT decoding in
+        engine slots (a training tenant's gang-held nodes): its live unit
+        count joins the capacity sweep in :meth:`check_isolation`, so
+        serve decode + training gangs together can never exceed the pool
+        — the mixed-species form of the weighted isolation invariant."""
+        if name in self._external or name in self._active:
+            raise ValueError(f"pool consumer {name!r} already registered")
+        self._external[name] = units
+
+    @property
+    def external_units(self) -> int:
+        """Node units held by non-engine consumers (training gangs)."""
+        return sum(fn() for fn in self._external.values())
 
     # ---------------------------------------------------------- accounts
     def active_of(self, tenant: str) -> int:
@@ -308,10 +327,17 @@ class PartitionedEngine:
                     "tenant %r decoding in foreign slots: %d active x "
                     "width %d > %d granted units"
                     % (tenant, active, self._width[tenant], granted))
-        if self.active_units > self.capacity:
-            self._violate(
-                "partitions exceed the pool: %d active units > %d"
-                % (self.active_units, self.capacity))
+        ext = self.external_units
+        if self.active_units + ext > self.capacity:
+            if ext:
+                self._violate(
+                    "partitions exceed the pool: %d active + %d external "
+                    "(training) units > %d"
+                    % (self.active_units, ext, self.capacity))
+            else:
+                self._violate(
+                    "partitions exceed the pool: %d active units > %d"
+                    % (self.active_units, self.capacity))
         if self.pager is not None:
             # the physical form of the same invariant: pages conserved,
             # no tenant mapping pages beyond its granted quota
@@ -412,6 +438,14 @@ class ServeFleet:
         engine to expose ``max_len`` (its cache depth prices a job's page
         need). Stats are unchanged field-for-field; the ledger rides
         underneath.
+    train: ``TrainTenantSpec``s for gang-scheduled HTC training tenants
+        sharing the provider pool (``repro.serve.tenant.TrainTenant``).
+        Their gangs hold provider nodes without decoding in engine
+        slots, so they join the isolation sweep as *external* pool
+        consumers: serve decode units + training gang units <= capacity,
+        every tick. They preempt themselves for parked serve demand and
+        appear in ``FleetStats.tenants`` next to the serve lanes. The
+        default (none) leaves the all-MTC fleet bit-identical to PR 8.
     """
 
     def __init__(self, tenant_streams: Sequence[Sequence[tuple[float, list[Job]]]],
@@ -426,7 +460,8 @@ class ServeFleet:
                  strict: bool = True, name: str = "serve-fleet",
                  widths: Sequence[int] | None = None,
                  event_skip: bool = False,
-                 page_size: int | None = None):
+                 page_size: int | None = None,
+                 train: Sequence[TrainTenantSpec] = ()):
         if not tenant_streams:
             raise ValueError("a fleet needs at least one tenant stream")
         n = len(tenant_streams)
@@ -486,7 +521,7 @@ class ServeFleet:
         self.strict = strict
         self._contention = sorted(contention, key=lambda e: e[0])
         self._cont_i = 0
-        self.lanes: list[ServeDriver] = []
+        self.lanes: list[Tenant] = []
         for i, (stream, pol, tname, w) in enumerate(
                 zip(tenant_streams, policies, names, widths)):
             every = max(int(round(pol.scan_interval / tick_s)), 1)
@@ -499,10 +534,28 @@ class ServeFleet:
                 slot_width=w)
             self.pool.bind(tname, lambda env=lane.env: env.owned)
             self.lanes.append(lane)
+        # training tenants: gang-held nodes come from the SAME provider
+        # pool, counted against capacity through the pool's external sweep
+        # (they hold nodes without decoding in engine slots)
+        for i, spec in enumerate(train):
+            tname = spec.name or f"{name}-train{i}"
+            every = max(int(round(spec.policy.scan_interval / tick_s)), 1)
+            phase = (int(round((n + i) * every / (n + len(train)))) % every
+                     if stagger else 0)
+            tt = TrainTenant(
+                spec.jobs, provider=provider, clock=self.clock,
+                policy=spec.policy, name=tname, tick_s=tick_s,
+                strict=strict, phase=phase, max_nodes=engine.capacity,
+                preempt_check_s=spec.preempt_check_s)
+            self.pool.attach_external(tname, lambda env=tt.env: env.busy)
+            self.lanes.append(tt)
         self._live = list(self.lanes)
         if max_ticks is None:
             merged = [ev for s in tenant_streams for ev in s]
             max_ticks = default_max_ticks(merged, engine, tick_s)
+            for lane in self.lanes:
+                if isinstance(lane, TrainTenant):
+                    max_ticks = max(max_ticks, lane.max_ticks)
         self.max_ticks = max_ticks
         # fleet-level event-skipping: a tick is quiet only if it is quiet
         # for EVERY lane (and the shared pool can jump its countdowns)
@@ -523,26 +576,32 @@ class ServeFleet:
     def _tick(self, k: int) -> None:
         """``ServeDriver._tick``'s phases, phase-major across tenants,
         with ONE fleet-wide decode step between the release and scan
-        phases. Keep the order mirrored with the single-tenant tick body
-        or fleet(N=1) parity breaks."""
+        phases — driven through the ``Tenant`` protocol hooks, which for
+        a serve lane alias exactly the old phase methods (so the all-MTC
+        fleet is bit-identical to the pre-protocol tick; pinned by
+        ``tests/test_tenant.py``). A training lane's ``pre_step`` is its
+        preemption check — deliberately in the release phase, so vacated
+        nodes drain to parked serve requests before this tick's scans.
+        Keep the order mirrored with the single-tenant tick body or
+        fleet(N=1) parity breaks."""
         now = self.clock.now()
         for lane in self._live:
-            lane._submit_arrivals(now)
+            lane.begin_tick(now)
         self._replay_contention(now)
         for lane in self._live:
-            lane._maybe_release(k)
+            lane.pre_step(k)
         self.pool.step_all()
         for lane in self._live:
-            lane._process_finishes(lane.engine.step())
+            lane.post_step(k)
         for lane in self._live:
-            lane._maybe_scan(k)
+            lane.control(k)
         for lane in self._live:
-            lane._flush_admissions()
+            lane.flush()
         for lane in self._live:
-            lane._check_invariants()
+            lane.check_invariants()
         self.pool.check_isolation()
         for lane in self._live:
-            lane._accumulate()
+            lane.accumulate()
         self.stats.peak_pool_active = max(self.stats.peak_pool_active,
                                           self.pool.active_total)
         self.stats.peak_pool_units = max(self.stats.peak_pool_units,
@@ -550,7 +609,7 @@ class ServeFleet:
         # retire completed tenants: the destroy closes their leases and
         # hands the slots back to the pool for everyone still running —
         # the consolidation saving a dedicated engine can never realize
-        for lane in [ln for ln in self._live if ln._done]:
+        for lane in [ln for ln in self._live if ln.retired]:
             lane.finalize(k)
             self._live.remove(lane)
 
@@ -579,8 +638,7 @@ class ServeFleet:
         if self.pool.backing.active_count:
             self.pool.backing.advance_quiet(dq)
         for lane in self._live:
-            lane.stats.busy_node_ticks += lane.env.busy * lane.tick_s * dq
-            lane.stats.owned_node_ticks += lane.env.owned * lane.tick_s * dq
+            lane.skip_quiet_stats(dq)
         self.clock.advance(self.tick_s * dq)
 
     # --------------------------------------------------------------- run
@@ -604,8 +662,7 @@ class ServeFleet:
         # hour (same guard as the emulator teardown in sim.systems)
         now = self.clock.now()
         for lane in self._live:
-            if not lane.env.destroyed:
-                lane.env.cancel_pending(now, drain=False)
+            lane.teardown(now)
         for lane in self._live:
             lane.finalize(k)
         self._live = []
@@ -613,16 +670,7 @@ class ServeFleet:
         s.ticks = k
         s.makespan_s = self.clock.now()
         for lane in self.lanes:
-            ls = lane.stats
-            s.workflows_completed += ls.workflows_completed
-            s.tasks_completed += ls.tasks_completed
-            s.busy_node_ticks += ls.busy_node_ticks
-            s.owned_node_ticks += ls.owned_node_ticks
-            s.node_hours += ls.node_hours
-            s.deferred_grants += ls.deferred_grants
-            s.deferred_nodes += ls.deferred_nodes
-            s.over_admissions += ls.over_admissions
-            s.tenants.append(ls.as_dict())
+            lane.rollup(s)
         if s.owned_node_ticks > 0:
             s.slot_utilization = s.busy_node_ticks / s.owned_node_ticks
         span = max(s.makespan_s, self.tick_s)
@@ -755,3 +803,51 @@ class ServeHeteroFleetSystem(ServeFleetSystem):
             policies = [self.default_policy(w) for w in widths]
         return super().serve(tenant_streams, widths=widths,
                              policies=policies, **kw)
+
+
+@register_system("dawningcloud-train-serve")
+class TrainServeFleetSystem(ServeHeteroFleetSystem):
+    """Train+serve consolidation: MTC serve tenants AND gang-scheduled
+    HTC training tenants on ONE provider pool — the paper's
+    heterogeneous-workload claim in its modern form (preemptible training
+    soaking the serve troughs; the companion study arXiv:1004.1276 asks
+    the same economies-of-scale question for batch-shaped scientific
+    communities). Serve lanes keep the hetero scenario's defaults;
+    training jobs ride in as ``TrainTenantSpec``s whose never-released
+    floor (``MgmtPolicy.initial``) is added to the capacity plan so a
+    parked gang floor can never strand the serve path."""
+
+    def default_train_policy(self, world_min: int) -> MgmtPolicy:
+        # HTC cadence (§3.2.2.2): 60 s scans, hourly release windows; the
+        # floor is one smallest gang so a preempted tenant can always
+        # restart its narrowest job without renegotiating
+        return MgmtPolicy(initial=world_min, ratio=2.0,
+                          scan_interval=60.0, release_interval=3600.0)
+
+    def serve(self, tenant_streams, *, train_jobs=(), train_policy=None,
+              train_specs: Sequence[TrainTenantSpec] = (),
+              capacity: int | None = None, engine=None,
+              widths=None, policies=None, **kw) -> FleetStats:
+        """Run the mixed fleet: ``train_jobs`` become one training tenant
+        (or pass prebuilt ``train_specs`` for several). Capacity defaults
+        to the serve plan plus the training tenants' gang floors."""
+        n = len(tenant_streams)
+        if widths is None:
+            widths = self.tenant_widths(n)
+        if policies is None:
+            policies = [self.default_policy(w) for w in widths]
+        specs = list(train_specs)
+        if train_jobs:
+            floor = max(j.world_min for j in train_jobs)
+            pol = (train_policy if train_policy is not None
+                   else self.default_train_policy(floor))
+            specs.append(TrainTenantSpec(jobs=tuple(train_jobs),
+                                         policy=pol))
+        if engine is None and capacity is None:
+            capacity = self.default_capacity(
+                tenant_streams, policies,
+                tick_s=kw.get("tick_s", 1.0), widths=widths)
+            capacity += sum(s.policy.initial for s in specs)
+        return super().serve(tenant_streams, capacity=capacity,
+                             engine=engine, widths=widths,
+                             policies=policies, train=tuple(specs), **kw)

@@ -407,6 +407,119 @@ SERVE_PROFILES: dict[int, ServeProfile] = {
 
 
 # --------------------------------------------------------------------------
+# HTC training streams (gang-scheduled jobs for repro.serve.tenant)
+# --------------------------------------------------------------------------
+@dataclass
+class TrainJob:
+    """One gang-scheduled training run in an HTC stream.
+
+    The gang starts only when ``world_min`` nodes are free (``nodes``
+    always queues at the floor — the DR2 ``min_useful`` contract) and
+    may elastically grow to ``world_max``. Work is denominated in
+    emulated optimizer steps: the job is done after ``steps`` steps,
+    where one step costs ``world_min * step_ticks`` node-ticks (elastic
+    growth is linear speedup), and a checkpoint exists at every
+    ``ckpt_every`` boundary — what a preemption can resume from.
+    Deliberately shaped like :class:`repro.core.types.Job` (jid /
+    arrival / nodes / deps / timestamps) so ``RuntimeEnv`` scheduling,
+    tracking, and triggers treat it as any other task; it carries no
+    ``runtime`` estimate, so the backfill scheduler takes no release
+    reservation for it (training end-times are elastic)."""
+
+    jid: int
+    arrival: float
+    world_min: int
+    world_max: int
+    steps: int
+    ckpt_every: int = 8
+    step_ticks: int = 1
+    arch: str = ""
+    name: str = ""
+    deps: tuple[int, ...] = ()
+    wid: int = -1
+    nodes: int = 0
+    submit_time: float = -1.0
+    start: float = -1.0
+    finish: float = -1.0
+
+    def __post_init__(self):
+        if self.world_min < 1 or self.world_max < self.world_min:
+            raise ValueError(
+                f"bad world band [{self.world_min}, {self.world_max}] "
+                f"for train job {self.name!r}")
+        if self.steps < 1 or self.ckpt_every < 1 or self.step_ticks < 1:
+            raise ValueError(
+                f"steps/ckpt_every/step_ticks must be >= 1 for train "
+                f"job {self.name!r}")
+        if self.nodes == 0:
+            self.nodes = self.world_min
+
+
+@dataclass(frozen=True)
+class TrainProfile:
+    """One model class's training-job shape, keyed by a ``repro.configs``
+    registry arch — the HTC counterpart of :class:`ServeProfile`. An HTC
+    training community is *many small heterogeneous runs* (the NAS-search
+    pattern: the same family swept over sizes/steps), so a stream draws
+    jobs from several profiles rather than one long run."""
+
+    arch: str
+    world_min: int
+    world_max: int
+    steps: int
+    ckpt_every: int = 8
+    step_ticks: int = 1
+
+    def job(self, jid: int, arrival: float, *, name: str = "",
+            wid: int = -1) -> TrainJob:
+        return TrainJob(
+            jid=jid, arrival=arrival, world_min=self.world_min,
+            world_max=self.world_max, steps=self.steps,
+            ckpt_every=self.ckpt_every, step_ticks=self.step_ticks,
+            arch=self.arch, name=name or f"{self.arch}/{jid}", wid=wid)
+
+
+#: canonical training-job classes at emulation scale, keyed by registry
+#: arch: a small fast-iterating run, a mid-size gang, a wide gang with
+#: real elastic range. World sizes are pool node units (same denomination
+#: as serve slot widths), steps are emulated optimizer steps.
+TRAIN_PROFILES: dict[str, TrainProfile] = {
+    "mamba2-1.3b": TrainProfile(arch="mamba2-1.3b", world_min=1,
+                                world_max=2, steps=48, ckpt_every=8),
+    "qwen2-7b": TrainProfile(arch="qwen2-7b", world_min=2,
+                             world_max=4, steps=64, ckpt_every=8),
+    "musicgen-large": TrainProfile(arch="musicgen-large", world_min=4,
+                                   world_max=8, steps=96, ckpt_every=16),
+}
+
+
+def train_stream(n_jobs: int, *, seed: int = 0,
+                 period: float = 86_400.0,
+                 profiles: "Sequence[TrainProfile] | None" = None,
+                 jid_base: int = 0) -> list[TrainJob]:
+    """A seeded HTC training stream: ``n_jobs`` gang-scheduled runs
+    cycling over ``profiles`` (default: the :data:`TRAIN_PROFILES`
+    classes in key order), arriving as a Poisson process over
+    ``[0, period)`` — the same arrival model as :func:`request_stream`,
+    with its own namespaced RNG. Job 0 arrives at t=0. ``jid_base``
+    keeps jids disjoint from any serve stream sharing the run."""
+    if n_jobs <= 0:
+        return []
+    if profiles is None:
+        profiles = [TRAIN_PROFILES[k] for k in sorted(TRAIN_PROFILES)]
+    rng = np.random.default_rng((seed << 8) ^ 0x7A41)
+    gaps = rng.exponential(period / max(n_jobs, 1), n_jobs)
+    arrivals = np.concatenate([[0.0], np.cumsum(gaps)[:-1]])
+    arrivals = np.minimum(arrivals, period - 1.0)
+    jobs = []
+    for k in range(n_jobs):
+        prof = profiles[k % len(profiles)]
+        jobs.append(prof.job(jid_base + k, float(arrivals[k]),
+                             name=f"{prof.arch}/run{k}", wid=k))
+    return jobs
+
+
+# --------------------------------------------------------------------------
 # columnar stream materialization (10^5-10^6 workflows in NumPy arrays)
 # --------------------------------------------------------------------------
 @dataclass
@@ -548,64 +661,119 @@ def _montage_template(n_project: int):
     return names, np.array(fixed, float), deps
 
 
+#: workflows per generation chunk — bounds every 2-D intermediate (the
+#: per-chunk runtime/prompt draws and dep tiles) to a few MB regardless
+#: of the stream's total size, which is what lets generation push past
+#: 10^6 workflows without the transient arrays dwarfing the outputs.
+COLUMNAR_CHUNK = 1 << 16
+
+
 def montage_stream_columnar(n_workflows: int, *, n_project: int = 8,
                             seed: int = 0, period: float = 3600.0,
                             width: int = 1,
                             seconds_per_token: float = 1.0,
                             prompt_lens: tuple[int, ...] = (4, 6, 8),
-                            mean_runtime: float = 11.38) -> ColumnarStream:
+                            mean_runtime: float = 11.38,
+                            chunk: int | None = None) -> ColumnarStream:
     """``n_workflows`` Montage-shaped workflows as one columnar stream,
-    generated in a handful of whole-array RNG passes — the 10^5-10^6
+    generated in bounded whole-array RNG chunks — the 10^5-10^6+
     workflow scale where looping :func:`montage_like` +
-    :func:`request_stream` per workflow costs more than the run itself.
+    :func:`request_stream` per workflow costs more than the run itself,
+    and where monolithic ``(workflows x tasks)`` intermediates stop
+    fitting next to the outputs.
 
     Workflows share the ``n_project`` mosaic DAG shape but draw their own
     parallel-task runtimes and prompt lengths; each workflow's mean task
     runtime is calibrated to ``mean_runtime`` exactly like
-    :func:`montage_like`. Arrivals are the same seeded Poisson process as
+    :func:`montage_like` (row-local, so chunking can't move it).
+    Arrivals are the same seeded Poisson process as
     :func:`request_stream` (workflow 0 at t=0). jids are dense
-    ``0..n_tasks-1``, ``wid`` = workflow index."""
+    ``0..n_tasks-1``, ``wid`` = workflow index.
+
+    chunk: workflows generated per RNG pass (default
+        :data:`COLUMNAR_CHUNK`). **Any** chunk size yields the same
+        stream bit-for-bit: each draw purpose (runtimes / token marks /
+        arrival gaps) has its own seeded generator, and numpy
+        ``Generator`` array fills consume the underlying bit stream
+        element-sequentially in C order, so splitting one ``(N, k)``
+        fill into row-block fills leaves every element's draw in place
+        (pinned in ``tests/test_serve_columnar.py`` at 10^5 workflows).
+    """
     if n_workflows < 1:
         raise ValueError(f"need n_workflows >= 1, got {n_workflows}")
     if width < 1:
         raise ValueError(f"width must be >= 1, got {width}")
-    rng = np.random.default_rng((seed << 8) ^ 0x5E12E)
+    if chunk is None:
+        chunk = COLUMNAR_CHUNK
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    # one generator per draw purpose: chunking must not let one
+    # purpose's draw count shift another purpose's position in the
+    # shared bit stream
+    rng_rt = np.random.default_rng((seed << 8) ^ 0x5E12E)
+    rng_tok = np.random.default_rng((seed << 8) ^ 0x70CE2)
+    rng_arr = np.random.default_rng((seed << 8) ^ 0xA1271)
     names_t, fixed, deps_t = _montage_template(n_project)
     m = len(names_t)                      # tasks per workflow
     par = np.isnan(fixed)                 # parallel stages draw lognormal
-    # runtimes: one (workflows x parallel-tasks) lognormal pass, serial
-    # stages fixed, then per-workflow mean calibration (rows independent)
-    rt = np.broadcast_to(fixed, (n_workflows, m)).copy()
-    rt[:, par] = rng.lognormal(np.log(11.0), 0.12,
-                               (n_workflows, int(par.sum())))
-    rt = np.maximum(rt, 0.5)
-    rt *= (mean_runtime / rt.mean(axis=1))[:, None]
-    # token marks: prompt lens from the profile's discrete set, decode
-    # budget reproducing the trace runtime at the decode rate
-    plen = rng.choice(np.asarray(prompt_lens, np.int64), (n_workflows, m))
-    dlen = np.maximum(np.round(rt / seconds_per_token), 1).astype(np.int64)
-    # Poisson workflow arrivals over [0, period), workflow 0 at t=0
-    gaps = rng.exponential(period / n_workflows, n_workflows)
-    arrivals = np.concatenate([[0.0], np.cumsum(gaps)[:-1]])
-    arrivals = np.minimum(arrivals, period - 1.0)
-    # deps: the template CSR tiled with a per-workflow position offset
+    npar = int(par.sum())
+    prompt_set = np.asarray(prompt_lens, np.int64)
     dcount = np.array([len(d) for d in deps_t], np.int64)
     dflat = np.array([p for d in deps_t for p in d], np.int64)
-    dep_ptr = np.concatenate(
-        [[0], np.cumsum(np.tile(dcount, n_workflows))])
-    dep_idx = (np.tile(dflat, n_workflows)
-               + np.repeat(np.arange(n_workflows, dtype=np.int64) * m,
-                           len(dflat)))
+    dper = len(dflat)                     # dep-edges per workflow
+    # preallocated flat outputs; chunks write disjoint slices
     n = n_workflows * m
+    runtime = np.empty(n, float)
+    plen_out = np.empty(n, np.int64)
+    dlen_out = np.empty(n, np.int64)
+    arrivals = np.empty(n_workflows, float)
+    dep_ptr = np.empty(n + 1, np.int64)
+    dep_ptr[0] = 0
+    dep_idx = np.empty(n_workflows * dper, np.int64)
+    elapsed = 0.0                         # arrival prefix-sum carry
+    for lo in range(0, n_workflows, chunk):
+        hi = min(lo + chunk, n_workflows)
+        c = hi - lo
+        # runtimes: a (chunk x parallel-tasks) lognormal pass, serial
+        # stages fixed, then per-workflow mean calibration
+        rt = np.broadcast_to(fixed, (c, m)).copy()
+        rt[:, par] = rng_rt.lognormal(np.log(11.0), 0.12, (c, npar))
+        rt = np.maximum(rt, 0.5)
+        rt *= (mean_runtime / rt.mean(axis=1))[:, None]
+        runtime[lo * m:hi * m] = rt.reshape(-1)
+        # token marks: prompt lens from the profile's discrete set,
+        # decode budget reproducing the trace runtime at the decode rate
+        plen_out[lo * m:hi * m] = rng_tok.choice(prompt_set,
+                                                 (c, m)).reshape(-1)
+        dlen_out[lo * m:hi * m] = np.maximum(
+            np.round(rt / seconds_per_token), 1).astype(np.int64).reshape(-1)
+        # Poisson workflow arrivals over [0, period), workflow 0 at t=0:
+        # each workflow arrives at the sum of every EARLIER gap, so the
+        # chunk's last gap rolls into the carry for the next chunk
+        # seeding the cumsum with the carry keeps every addition in the
+        # same sequential left-fold a monolithic cumsum performs, so the
+        # prefix sums are bit-identical for any chunk size (a scalar
+        # ``carry + cumsum(chunk)`` would regroup the float additions)
+        gaps = rng_arr.exponential(period / n_workflows, c)
+        seq = np.cumsum(np.concatenate([[elapsed], gaps]))
+        arrivals[lo:hi] = seq[:-1]
+        elapsed = seq[-1]
+        # deps: the template CSR tiled with per-workflow position offsets
+        dep_ptr[lo * m + 1:hi * m + 1] = (dep_ptr[lo * m]
+                                          + np.cumsum(np.tile(dcount, c)))
+        dep_idx[lo * dper:hi * dper] = (
+            np.tile(dflat, c)
+            + np.repeat(np.arange(lo, hi, dtype=np.int64) * m, dper))
+    np.minimum(arrivals, period - 1.0, out=arrivals)
     return ColumnarStream(
         entry_arrival=arrivals,
         entry_wid=np.arange(n_workflows, dtype=np.int64),
         entry_ptr=np.arange(n_workflows + 1, dtype=np.int64) * m,
         jid=np.arange(n, dtype=np.int64),
-        runtime=rt.reshape(-1),
+        runtime=runtime,
         nodes=np.full(n, width, np.int64),
-        prompt_len=plen.reshape(-1).astype(np.int64),
-        decode_len=dlen.reshape(-1),
-        dep_ptr=dep_ptr.astype(np.int64),
-        dep_idx=dep_idx.astype(np.int64),
+        prompt_len=plen_out,
+        decode_len=dlen_out,
+        dep_ptr=dep_ptr,
+        dep_idx=dep_idx,
         names=None)

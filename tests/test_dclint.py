@@ -100,6 +100,19 @@ def test_dc201_passes_seeded_rng_and_perf_counter(tmp_path):
     assert vs == []
 
 
+def test_dc201_flags_unseeded_default_rng(tmp_path):
+    vs = run_on(tmp_path, "src/repro/sim/x.py", """\
+        import numpy as np
+
+        def draw(seed):
+            bad = np.random.default_rng()
+            ok = np.random.default_rng(seed)
+            return bad.random() + ok.random()
+        """)
+    assert codes(vs) == ["DC201"]
+    assert "entropy" in vs[0].message
+
+
 def test_dc201_launch_is_exempt(tmp_path):
     vs = run_on(tmp_path, "src/repro/launch/x.py",
                 "import time\nSTAMP = time.time()\n")
@@ -463,6 +476,94 @@ def test_fix_honors_pragmas_and_scope(tmp_path):
     assert fix_paths([tmp_path / "src"], root=tmp_path) == (0, 0)
     assert "assert x" in sup.read_text()
     assert "assert n > 0" in out.read_text()
+
+
+# =====================================================================
+# --fix: mechanical DC201 numpy-RNG rewrite
+# =====================================================================
+_RNG_FIX_FIXTURE = """\
+import numpy as np
+
+def sample(values):
+    rng = np.random.default_rng()
+    a = np.random.rand(3, 4)
+    b = np.random.randn(8)
+    c = np.random.randint(0, 9, size=5)
+    d = np.random.choice(values, 2, replace=False)
+    return rng, a, b, c, d
+"""
+
+
+def test_fix_rewrites_numpy_rng_and_relints_clean(tmp_path):
+    p = tmp_path / "src/repro/sim/x.py"
+    p.parent.mkdir(parents=True)
+    p.write_text(_RNG_FIX_FIXTURE)
+    bl = tmp_path / "baseline.json"
+    argv = ["src", "--root", str(tmp_path), "--baseline", str(bl)]
+    assert dclint_main(argv) == 1
+    assert dclint_main(argv + ["--fix"]) == 0
+    fixed = p.read_text()
+    assert "np.random.default_rng(0)" in fixed
+    assert "np.random.default_rng(0).random((3, 4))" in fixed
+    assert "np.random.default_rng(0).standard_normal(8)" in fixed
+    assert "np.random.default_rng(0).integers(0, 9, size=5)" in fixed
+    assert "np.random.default_rng(0).choice(values, 2, replace=False)" \
+        in fixed
+    assert lint_file(p, root=tmp_path) == []
+    assert dclint_main(argv) == 0          # idempotent: stays clean
+
+    # the rewrite is runnable and deterministic (fixed seed 0)
+    import numpy as np
+    ns: dict = {}
+    exec(compile(fixed, str(p), "exec"), ns)
+    rng, a, b, c, d = ns["sample"](np.arange(10))
+    assert a.shape == (3, 4) and b.shape == (8,) and c.shape == (5,)
+    assert np.array_equal(c, np.random.default_rng(0).integers(
+        0, 9, size=5))
+
+
+def test_fix_skips_rng_calls_with_no_mechanical_rewrite(tmp_path):
+    p = tmp_path / "src/repro/sim/x.py"
+    p.parent.mkdir(parents=True)
+    p.write_text("import numpy as np\n"
+                 "def f():\n"
+                 "    np.random.seed(7)\n"          # unmapped method
+                 "    x = np.random.uniform(\n"     # multi-line call
+                 "        0.0, 1.0)\n"
+                 "    return x + np.random.rand()\n")
+    from tools.dclint.fix import fix_file
+    assert fix_file(p, root=tmp_path) == (1, 2)
+    txt = p.read_text()
+    assert "np.random.seed(7)" in txt              # left for a human
+    assert "np.random.uniform(\n" in txt           # multi-line untouched
+    assert "np.random.default_rng(0).random()" in txt
+    assert codes(lint_file(p, root=tmp_path)) == ["DC201"] * 2
+
+
+def test_fix_rng_honors_pragma(tmp_path):
+    p = tmp_path / "src/repro/sim/x.py"
+    p.parent.mkdir(parents=True)
+    p.write_text("import numpy as np\n"
+                 "x = np.random.rand()  # dclint: disable=DC201\n")
+    from tools.dclint.fix import fix_file
+    assert fix_file(p, root=tmp_path) == (0, 0)
+    assert "np.random.rand()" in p.read_text()
+
+
+def test_fix_rng_nested_calls_converge_on_second_pass(tmp_path):
+    # a flagged call nested inside another flagged call is skipped on
+    # the first pass (its byte span goes stale after the outer splice)
+    # and picked up by the next run — --fix converges, never corrupts
+    p = tmp_path / "src/repro/sim/x.py"
+    p.parent.mkdir(parents=True)
+    p.write_text("import numpy as np\n"
+                 "x = np.random.choice(np.random.rand(4))\n")
+    from tools.dclint.fix import fix_file
+    assert fix_file(p, root=tmp_path) == (1, 1)
+    assert fix_file(p, root=tmp_path) == (1, 0)
+    assert ("np.random.default_rng(0).choice("
+            "np.random.default_rng(0).random(4))") in p.read_text()
+    assert lint_file(p, root=tmp_path) == []
 
 
 # =====================================================================

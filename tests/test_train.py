@@ -118,6 +118,31 @@ def test_microbatch_accumulation_matches_full_batch():
     assert float(jnp.max(jnp.abs(flat1 - flat2))) < 5e-2
 
 
+def test_preempt_resume_losses_bit_identical(tmp_path):
+    """The preempt/resume parity contract (tests/README.md): a run
+    interrupted by ``Preemption`` mid-run and resumed from
+    ``latest_step`` produces step-for-step bit-identical losses to an
+    uninterrupted run — fails if ANY state (params, optimizer moments,
+    schedule step, data order) escapes the checkpoint. This is the real
+    counterpart of the emulated checkpoint-rollback model in
+    ``repro.serve.tenant.TrainTenant``."""
+    rcfg = smoke_runconfig("qwen2-7b", total_steps=12)
+    ref = train_loop(rcfg, ckpt_dir=str(tmp_path / "ref"), num_steps=12,
+                     ckpt_every=4)
+    rep = train_loop(rcfg, ckpt_dir=str(tmp_path / "pre"), num_steps=12,
+                     ckpt_every=4, fail_at={6: True})
+    assert rep.restarts == 1
+    # attempt 1 ran steps 0..5 and died before step 6; the resume
+    # restored the step-4 checkpoint and replayed 4..11
+    assert len(rep.losses) == 6 + 8
+    # pre-preemption losses match the reference exactly
+    assert rep.losses[:6] == ref.losses[:6]
+    # the replayed + resumed tail is bit-identical to the uninterrupted
+    # trajectory from the checkpoint step on — float ==, no tolerance
+    assert rep.losses[6:] == ref.losses[4:]
+    assert rep.final_loss == ref.final_loss
+
+
 def test_loss_decreases_over_training(tmp_ckpt):
     rcfg = smoke_runconfig("mamba2-1.3b", total_steps=40,
                            learning_rate=3e-3)

@@ -50,9 +50,11 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--no-baseline", action="store_true",
                     help="report every finding, ignoring the baseline")
     ap.add_argument("--fix", action="store_true",
-                    help="rewrite flagged DC101 bare asserts in place "
-                         "into guarded raises, then re-lint; baseline "
-                         "entries paid down by the rewrite are pruned")
+                    help="rewrite flagged findings in place (DC101 bare "
+                         "asserts into guarded raises, DC201 numpy "
+                         "global-RNG calls into seeded default_rng(0) "
+                         "generators), then re-lint; baseline entries "
+                         "paid down by the rewrite are pruned")
     ap.add_argument("--update-baseline", action="store_true",
                     help="prune stale entries from the baseline (burn-"
                          "down); never adds entries unless --rebaseline")
@@ -82,10 +84,10 @@ def main(argv: list[str] | None = None) -> int:
         from tools.dclint import fix as fix_mod
         n_fixed, n_skipped = fix_mod.fix_paths(paths, root=root)
         if not args.json:
-            msg = f"dclint --fix: rewrote {n_fixed} bare assert(s)"
+            msg = f"dclint --fix: rewrote {n_fixed} finding(s)"
             if n_skipped:
-                msg += (f", skipped {n_skipped} not starting their line "
-                        f"(fix by hand)")
+                msg += (f", skipped {n_skipped} with no mechanical "
+                        f"rewrite (fix by hand)")
             print(msg)
 
     violations = lint_paths(paths, root=root)

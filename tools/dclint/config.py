@@ -39,8 +39,12 @@ SLOT_NAMES = frozenset({"active", "slots", "active_count", "active_slots",
                         "free_slots", "n_slots"})
 SLOT_SUFFIXES = ("_slots",)
 # Node units: the provider's grant denomination (1 slot = `width` units).
+# A training gang's world size is denominated in node units too — the
+# gang holds `world` provider nodes — so the world-size names join this
+# lexicon rather than forming a fourth denomination.
 UNIT_NAMES = frozenset({"owned", "granted", "capacity", "capacity_units",
-                        "nodes", "units", "busy"})
+                        "nodes", "units", "busy",
+                        "world", "world_min", "world_max", "world_size"})
 UNIT_SUFFIXES = ("_units", "_nodes")
 # Width: node units per slot — multiplying a slot count by a width IS the
 # sanctioned conversion (as is dividing units by a width). (`free` is

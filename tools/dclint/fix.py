@@ -1,6 +1,7 @@
-"""``dclint --fix``: the mechanical DC101 rewrite (assert -> guarded raise).
+"""``dclint --fix``: the mechanical DC101 and DC201 rewrites.
 
-DC101's fix pattern is purely syntactic, so the linter can apply it::
+DC101's fix pattern (assert -> guarded raise) is purely syntactic, so
+the linter can apply it::
 
     assert COND              ->  if not COND:
                                      raise RuntimeError(
@@ -19,11 +20,30 @@ from ``a > b`` under NaN). Non-string messages go through ``repr`` rather
 than an f-string so ``ast.unparse`` never has to re-quote the expression
 inside a format literal (fragile before 3.12).
 
+DC201's numpy global-RNG findings are equally mechanical::
+
+    np.random.default_rng()  ->  np.random.default_rng(0)
+    np.random.rand(3, 4)     ->  np.random.default_rng(0).random((3, 4))
+    np.random.randn(8)       ->  np.random.default_rng(0).standard_normal(8)
+    np.random.randint(0, 9)  ->  np.random.default_rng(0).integers(0, 9)
+    np.random.choice(a, 3)   ->  np.random.default_rng(0).choice(a, 3)
+
+The legacy varargs shapes of ``rand``/``randn`` become one shape tuple;
+every other mapped method keeps its arguments verbatim (the ``Generator``
+signatures are compatible). The seed constant 0 makes the call
+deterministic and GREPPABLE — a review decides whether 0 is the right
+seed or a threaded one, which is exactly the DC201 fix pattern's intent.
+Unmapped methods (``np.random.seed``, bit-generator state pokes) and the
+wall-clock findings are left flagged for a human. Only *pure* numpy-RNG
+expressions are spliced: calls spanning multiple lines, calls nested in
+another flagged call, or calls sharing a line with a flagged assert are
+skipped this pass (a second ``--fix`` run converges).
+
 Only findings the linter itself reports are rewritten — the fix is driven
 from ``lint_file`` output, so rule scoping and ``# dclint: disable``
 pragmas are honored for free. Asserts that do not start their line
 (``if x: assert y``) are skipped and left flagged for a human. Rewrites
-are applied bottom-up so earlier line numbers stay valid; fixed findings
+are applied bottom-up so earlier positions stay valid; fixed findings
 then show up as *stale* baseline entries, which the CLI prunes.
 """
 from __future__ import annotations
@@ -34,6 +54,19 @@ from pathlib import Path
 from tools.dclint import REPO_ROOT, lint_file
 
 __all__ = ["fix_file", "fix_paths"]
+
+#: legacy ``np.random.<fn>`` -> seeded ``Generator.<method>`` (argument
+#: lists pass through verbatim; ``rand``/``randn`` varargs are tupled)
+NP_FN_MAP = {
+    "rand": "random", "randn": "standard_normal", "randint": "integers",
+    "random_sample": "random", "random": "random", "choice": "choice",
+    "shuffle": "shuffle", "permutation": "permutation",
+    "uniform": "uniform", "normal": "normal",
+    "standard_normal": "standard_normal", "exponential": "exponential",
+    "lognormal": "lognormal", "poisson": "poisson", "gamma": "gamma",
+    "beta": "beta", "binomial": "binomial", "bytes": "bytes",
+}
+_DIMS_TUPLED = {"rand", "randn"}         # *dims varargs -> one shape tuple
 
 
 def _guarded_raise(node: ast.Assert) -> str:
@@ -64,23 +97,107 @@ def _guarded_raise(node: ast.Assert) -> str:
     return ast.unparse(ast.fix_missing_locations(guard))
 
 
-def fix_file(path: Path, *, root: Path | None = None) -> tuple[int, int]:
-    """Rewrite flagged DC101 asserts in ``path`` in place.
+def _dotted(node: ast.AST) -> str | None:
+    """'a.b.c' for a Name/Attribute chain, else None (the DC201 rule's
+    resolver, re-stated so the fixer matches what the rule flagged)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
 
-    -> ``(n_fixed, n_skipped)``; skipped asserts are flagged but not
-    statement-initial on their line, so a block rewrite can't land.
+
+def _seeded_rng_call(node: ast.Call) -> str | None:
+    """The seeded-generator replacement text for one flagged numpy-RNG
+    call, or None when the call has no mechanical rewrite."""
+    dotted = _dotted(node.func)
+    if dotted is None:
+        return None
+    parts = dotted.split(".")
+    if (len(parts) < 3 or parts[-2] != "random"
+            or parts[-3] not in ("np", "numpy")):
+        return None                      # a wall-clock/stdlib finding
+    prefix = ".".join(parts[:-1])        # 'np.random' as written
+    tail = parts[-1]
+    if tail == "default_rng":
+        if node.args or node.keywords:
+            return None                  # already seeded — not ours
+        return f"{prefix}.default_rng(0)"
+    method = NP_FN_MAP.get(tail)
+    if method is None:
+        return None                      # np.random.seed & friends
+    if tail in _DIMS_TUPLED:
+        if node.keywords or any(isinstance(a, ast.Starred)
+                                for a in node.args):
+            return None
+        if not node.args:
+            arg_text = ""
+        elif len(node.args) == 1:
+            arg_text = ast.unparse(node.args[0])
+        else:
+            arg_text = ("(" + ", ".join(ast.unparse(a) for a in node.args)
+                        + ")")
+    else:
+        if any(isinstance(a, ast.Starred) for a in node.args):
+            return None
+        pieces = [ast.unparse(a) for a in node.args]
+        pieces += [(f"**{ast.unparse(kw.value)}" if kw.arg is None
+                    else f"{kw.arg}={ast.unparse(kw.value)}")
+                   for kw in node.keywords]
+        arg_text = ", ".join(pieces)
+    return f"{prefix}.default_rng(0).{method}({arg_text})"
+
+
+def fix_file(path: Path, *, root: Path | None = None) -> tuple[int, int]:
+    """Rewrite flagged DC101 asserts and DC201 numpy-RNG calls in
+    ``path`` in place.
+
+    -> ``(n_fixed, n_skipped)``; skipped findings are flagged but have
+    no safe mechanical rewrite this pass (an assert not starting its
+    line, a multi-line or nested RNG call, an unmapped RNG method).
     """
     root = root or REPO_ROOT
-    flagged = {v.line for v in lint_file(path, root=root)
-               if v.code == "DC101"}
-    if not flagged:
+    findings = lint_file(path, root=root)
+    assert_lines = {v.line for v in findings if v.code == "DC101"}
+    rng_marks = {(v.line, v.col) for v in findings if v.code == "DC201"}
+    if not assert_lines and not rng_marks:
         return 0, 0
     src = path.read_text(encoding="utf-8")
     tree = ast.parse(src, filename=str(path))
     lines = src.splitlines(keepends=True)
-    targets = [n for n in ast.walk(tree)
-               if isinstance(n, ast.Assert) and n.lineno in flagged]
     fixed = skipped = 0
+
+    # --- DC201: splice seeded-generator expressions, innermost-last.
+    # Offsets come from the original source, so a call nested inside
+    # another flagged call (its span would go stale after the outer
+    # splice) or sharing a line with a flagged assert (the DC101 block
+    # rewrite re-renders the whole statement) is skipped this pass.
+    calls = [n for n in ast.walk(tree) if isinstance(n, ast.Call)
+             and (n.lineno, n.col_offset) in rng_marks]
+    spans = {id(n): (n.lineno, n.col_offset, n.end_lineno,
+                     n.end_col_offset) for n in calls}
+    for node in sorted(calls, key=lambda n: (n.lineno, n.col_offset),
+                       reverse=True):
+        lo, lc, hi, hc = spans[id(node)]
+        nested = any(o is not node
+                     and spans[id(o)][:2] <= (lo, lc)
+                     and (hi, hc) <= spans[id(o)][2:]
+                     for o in calls)
+        repl = _seeded_rng_call(node)
+        if repl is None or lo != hi or nested or lo in assert_lines:
+            skipped += 1
+            continue
+        raw = lines[lo - 1].encode("utf-8")    # ast cols are byte offsets
+        lines[lo - 1] = (raw[:lc] + repl.encode("utf-8")
+                         + raw[hc:]).decode("utf-8")
+        fixed += 1
+
+    # --- DC101: statement-level assert -> guarded-raise block rewrites
+    targets = [n for n in ast.walk(tree)
+               if isinstance(n, ast.Assert) and n.lineno in assert_lines]
     for node in sorted(targets, key=lambda n: n.lineno, reverse=True):
         indent = lines[node.lineno - 1][:node.col_offset]
         if indent.strip():
@@ -90,6 +207,7 @@ def fix_file(path: Path, *, root: Path | None = None) -> tuple[int, int]:
                 for ln in _guarded_raise(node).splitlines()]
         lines[node.lineno - 1:node.end_lineno] = repl
         fixed += 1
+
     if fixed:
         path.write_text("".join(lines), encoding="utf-8")
     return fixed, skipped

@@ -72,11 +72,19 @@ def check(tree: ast.AST, src_lines: list[str], rel: str):
                        f"`{dotted}()` mutates/reads global RNG state; "
                        f"use a seeded random.Random(seed) instance")
             elif (len(parts) >= 3 and parts[-2] == "random"
-                  and parts[-3] in ("np", "numpy")
-                  and tail not in _NP_RANDOM_ALLOWED):
-                yield (node.lineno, node.col_offset,
-                       f"`{dotted}()` uses numpy's global RNG state; "
-                       f"use np.random.default_rng(seed)")
+                  and parts[-3] in ("np", "numpy")):
+                if tail not in _NP_RANDOM_ALLOWED:
+                    yield (node.lineno, node.col_offset,
+                           f"`{dotted}()` uses numpy's global RNG state; "
+                           f"use np.random.default_rng(seed)")
+                elif (tail == "default_rng"
+                      and not node.args and not node.keywords):
+                    # allowed constructor, but with no seed it draws one
+                    # from OS entropy — exactly the nondeterminism the
+                    # seeded-generator idiom exists to avoid
+                    yield (node.lineno, node.col_offset,
+                           f"`{dotted}()` without a seed is entropy-"
+                           f"seeded; pass an explicit seed")
         elif isinstance(node, ast.ImportFrom):
             if node.module == "time":
                 for a in node.names:
