@@ -1,0 +1,283 @@
+"""Flow-layer self-tests for ``tools/dclint/flow`` (CFG, dataflow,
+project call graph).
+
+Three tiers, mirroring the layer structure:
+
+* **CFG goldens** — small functions with known block/edge shapes
+  (branch join, loop back-edge + break/continue, try exceptional
+  edges, early return), pinned via ``CFG.shape()`` so a builder edit
+  that drops an edge (and silently weakens every flow rule) fails
+  loudly here.
+* **Dataflow units** — reaching definitions merge at joins, kill
+  within a block, and seed from parameters.
+* **Call graph** — the interprocedural spine DC302/DC601 stand on,
+  pinned against the LIVE tree: the grant-callback edges
+  ``ResourceProvider._drain -> RuntimeEnv._apply_grant ->
+  {ServeDriver,TrainTenant}._on_grant`` must resolve across modules,
+  and ``drain_read_attrs()`` must recover the ledger fields the drain
+  loop actually reads. If a refactor renames the wiring, these fail
+  before the rules go blind.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.dclint import collect_files  # noqa: E402
+from tools.dclint.flow import (  # noqa: E402
+    Project, attr_writes, build_cfg, mutating_calls, reaching_definitions,
+)
+from tools.dclint.flow.cfg import CFG  # noqa: E402
+from tools.dclint.flow.dataflow import chain_names  # noqa: E402
+
+
+def fn_of(code: str) -> ast.FunctionDef:
+    tree = ast.parse(textwrap.dedent(code))
+    (node,) = tree.body
+    assert isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+    return node
+
+
+# =====================================================================
+# CFG goldens
+# =====================================================================
+def test_cfg_if_else_joins(tmp_path):
+    cfg = build_cfg(fn_of("""\
+        def f(x):
+            if x:
+                a = 1
+            else:
+                a = 2
+            return a
+        """))
+    assert cfg.shape() == [
+        (0, "entry", (2, 3)),
+        (1, "exit", ()),
+        (2, "Assign", (4,)),          # then
+        (3, "Assign", (4,)),          # else
+        (4, "Return", (1,)),          # join
+    ]
+
+
+def test_cfg_early_return_false_edge_falls_through(tmp_path):
+    cfg = build_cfg(fn_of("""\
+        def g(x):
+            if x:
+                return 0
+            x += 1
+            return x
+        """))
+    assert cfg.shape() == [
+        (0, "entry", (2, 3)),         # false edge goes straight to join
+        (1, "exit", ()),
+        (2, "Return", (1,)),          # early return terminates its block
+        (3, "AugAssign,Return", (1,)),
+    ]
+
+
+def test_cfg_loop_back_edge_break_continue(tmp_path):
+    cfg = build_cfg(fn_of("""\
+        def h(items):
+            total = 0
+            for x in items:
+                if x < 0:
+                    continue
+                if x > 9:
+                    break
+                total += x
+            return total
+        """))
+    assert cfg.shape() == [
+        (0, "entry", (2,)),
+        (1, "exit", ()),
+        (2, "For", (3, 4)),           # header: exit edge + body edge
+        (3, "Return", (1,)),          # after-loop
+        (4, "If", (5, 6)),
+        (5, ".", (2,)),               # continue -> header
+        (6, "If", (7, 8)),
+        (7, ".", (3,)),               # break -> after
+        (8, "AugAssign", (2,)),       # back-edge
+    ]
+
+
+def test_cfg_try_exceptional_edges_reach_handler_and_finally(tmp_path):
+    cfg = build_cfg(fn_of("""\
+        def k(q):
+            try:
+                q.validate()
+                r = q.commit()
+            except KeyError:
+                r = None
+            finally:
+                q.close()
+            return r
+        """))
+    assert cfg.shape() == [
+        (0, "entry", (2,)),
+        (1, "exit", ()),
+        (2, "Expr,Assign", (3, 4)),   # body: may raise into the handler
+        (3, "Name,Assign", (4,)),     # handler (type expr + its suite)
+        (4, "Expr,Return", (1,)),     # finally, then fall through
+    ]
+
+
+def test_cfg_nodes_after_sees_loop_round_trip():
+    fn = fn_of("""\
+        def h(items):
+            total = 0
+            for x in items:
+                total += x
+            return total
+        """)
+    cfg = build_cfg(fn)
+    aug = fn.body[1].body[0]
+    after = cfg.nodes_after(aug)
+    kinds = [type(n).__name__ for n in after]
+    # the back-edge re-includes the header and the loop body itself
+    assert "For" in kinds and "Return" in kinds and "AugAssign" in kinds
+    # nothing runs after the final return
+    assert cfg.nodes_after(fn.body[2]) == []
+
+
+# =====================================================================
+# dataflow units
+# =====================================================================
+def test_reaching_defs_merge_at_join_and_seed_params():
+    fn = fn_of("""\
+        def rd(flag):
+            y = 0
+            if flag:
+                y = 1
+            return y
+        """)
+    cfg = build_cfg(fn)
+    rd = reaching_definitions(cfg, fn)
+    ret_block = cfg.find(fn.body[2])[0]
+    in_set, _ = rd[ret_block]
+    assert {(n, ln) for n, ln, _ in in_set if n == "y"} == {
+        ("y", 2), ("y", 4)}           # both branches' defs reach the join
+    assert any(n == "flag" for n, _, _ in in_set)   # param seeded
+
+
+def test_reaching_defs_kill_within_block():
+    fn = fn_of("""\
+        def rk(a):
+            a = 1
+            a = 2
+            return a
+        """)
+    cfg = build_cfg(fn)
+    rd = reaching_definitions(cfg, fn)
+    _, out_set = rd[CFG.ENTRY]
+    # the later def killed both the earlier one and the parameter
+    assert {(n, ln) for n, ln, _ in out_set if n == "a"} == {("a", 3)}
+
+
+def test_lexers_chain_orientation_and_subscript_writes():
+    tree = ast.parse(
+        "self.provider.admission_queue.remove(req)\n"
+        "self._work[jid] = v\n")
+    ((chain, meth, _),) = mutating_calls(tree)
+    assert meth == "remove"
+    assert chain == ("admission_queue", "provider", "self")
+    ((wchain, wattr, _),) = attr_writes(tree)
+    assert (wchain, wattr) == (("self",), "_work")
+    assert chain_names(ast.parse("self.a.b[0].c", mode="eval").body) == \
+        ("c", "b", "a", "self")
+
+
+# =====================================================================
+# project call graph — synthetic wiring
+# =====================================================================
+def test_callback_edges_resolve_across_modules(tmp_path):
+    a = tmp_path / "env.py"
+    a.write_text(textwrap.dedent("""\
+        class Env:
+            def scan(self):
+                self.provision.submit_request(
+                    "a", 4, 0.0, on_grant=self._apply)
+
+            def _apply(self, offer, t):
+                return offer
+        """))
+    b = tmp_path / "driver.py"
+    b.write_text(textwrap.dedent("""\
+        class Driver:
+            def __init__(self, env):
+                env.grant_listener = self._on_grant
+
+            def _on_grant(self, take, t, live):
+                return take
+
+            def fire(self, req):
+                req.on_grant(3, 0.0)
+
+            def notify(self, take, t):
+                self.grant_listener(take, t, True)
+        """))
+    project = Project.from_paths([a, b], root=tmp_path)
+    cg = project.callgraph()
+    # each callback-attr call fans out to the targets wired to ITS kind
+    # — the on_grant edge crosses the module boundary
+    assert "env.py::Env._apply" in cg["driver.py::Driver.fire"]
+    assert "driver.py::Driver._on_grant" in cg["driver.py::Driver.notify"]
+    # roots: the on_grant= kwarg and the .grant_listener assignment
+    assert {fi.key for fi in project.callback_targets["on_grant"]} == {
+        "env.py::Env._apply"}
+    assert {fi.key for fi in project.callback_targets["grant_listener"]} \
+        == {"driver.py::Driver._on_grant"}
+
+
+# =====================================================================
+# project call graph — the live tree (DC302/DC601's spine)
+# =====================================================================
+@pytest.fixture(scope="module")
+def live_project() -> Project:
+    files = collect_files([REPO / "src"])
+    return Project.from_paths(files, root=REPO)
+
+
+def test_live_drain_reaches_grant_callbacks(live_project):
+    cg = live_project.callgraph()
+    drain = "src/repro/core/provider.py::ResourceProvider._drain"
+    apply_grant = "src/repro/core/tre.py::RuntimeEnv._apply_grant"
+    assert apply_grant in cg[drain]
+    # the env's grant_listener fan-out: serve driver AND train tenant
+    assert "src/repro/serve/driver.py::ServeDriver._on_grant" \
+        in cg[apply_grant]
+    assert "src/repro/serve/tenant.py::TrainTenant._on_grant" \
+        in cg[apply_grant]
+
+
+def test_live_callback_roots_include_apply_grant(live_project):
+    roots = {fi.key
+             for targets in live_project.callback_targets.values()
+             for fi in targets}
+    assert "src/repro/core/tre.py::RuntimeEnv._apply_grant" in roots
+
+
+def test_live_drain_read_attrs_cover_the_ledger(live_project):
+    reads = live_project.drain_read_attrs()
+    assert {"_draining", "admission_queue", "allocated", "capacity",
+            "quotas", "reservations", "policy"} <= reads
+
+
+def test_reachable_records_root_first_paths(live_project):
+    roots = [fi
+             for targets in live_project.callback_targets.values()
+             for fi in targets
+             if fi.qualname == "RuntimeEnv._apply_grant"]
+    reach = live_project.reachable(roots)
+    paths = {fi.qualname: p for fi, p in reach.items()}
+    root_path = paths["RuntimeEnv._apply_grant"]
+    assert len(root_path) == 1
+    # every recorded path starts at its root (the "via a -> b" diagnostic)
+    assert all(p[0] == root_path[0] for p in paths.values())

@@ -17,11 +17,17 @@ DC201  control-plane + benchmark code must be deterministic
 DC301  ``on_grant``/``grant_listener`` callbacks must not re-enter
        the provider ledger (request/release/amend/cancel or direct
        ledger mutation) — the provider may be mid-drain
+DC302  nothing *reachable* from a grant callback (project call
+       graph, flow layer) may write a ledger field the drain loop
+       reads, except through the documented amend/cancel/release API
 DC401  slot counts and node units must not mix arithmetically
        without passing through a width conversion
 DC501  pallas kernels must be tracer-safe (no Python control flow
        on traced values, static BlockSpec shapes, no mutable
        default args under ``jax.jit``)
+DC601  Tenant phase discipline: hooks mutate grant/ledger state
+       only in their assigned phase; ``next_event_tick``/
+       ``skip_quiet_stats`` stay pure for event-skip parity
 =====  ======================================================
 
 Run ``python -m tools.dclint src benchmarks`` (stdlib only; the optional
@@ -80,9 +86,16 @@ def _source_line(src_lines: list[str], lineno: int) -> str:
     return ""
 
 
-def lint_file(path: Path, *, root: Path | None = None) -> list[Violation]:
+def lint_file(path: Path, *, root: Path | None = None,
+              project=None) -> list[Violation]:
     """Run every rule whose scope covers ``path``; pragma-suppressed
-    findings are dropped here (the baseline is applied by the caller)."""
+    findings are dropped here (the baseline is applied by the caller).
+
+    Flow-based rules (those exposing ``check_project``) receive a
+    :class:`tools.dclint.flow.Project`. ``lint_paths`` builds one over
+    every file being linted and passes it down; a direct ``lint_file``
+    call without one analyzes the file as a one-module project (the
+    fixture-test mode)."""
     from tools.dclint import config, pragmas
     from tools.dclint.rules import RULES
 
@@ -105,7 +118,15 @@ def lint_file(path: Path, *, root: Path | None = None) -> list[Violation]:
     out: list[Violation] = []
     for code in codes:
         rule = RULES[code]
-        for line, col, msg in rule.check(tree, src_lines, rel):
+        project_check = getattr(rule, "check_project", None)
+        if project_check is not None:
+            if project is None:
+                from tools.dclint.flow import Project
+                project = Project({rel: tree})
+            found = project_check(project, tree, src_lines, rel)
+        else:
+            found = rule.check(tree, src_lines, rel)
+        for line, col, msg in found:
             if pragmas.suppressed(suppressions, code, line):
                 continue
             out.append(Violation(rel, line, col, code, msg,
@@ -114,10 +135,10 @@ def lint_file(path: Path, *, root: Path | None = None) -> list[Violation]:
     return out
 
 
-def lint_paths(paths: list[Path], *, root: Path | None = None
-               ) -> list[Violation]:
-    """Lint every ``.py`` file under the given files/directories."""
-    root = root or REPO_ROOT
+def collect_files(paths: list[Path]) -> list[Path]:
+    """The ``.py`` files under the given files/directories, sorted,
+    ``__pycache__`` skipped — the linter's single path-expansion rule
+    (the CLI uses it to reject an empty scope as a usage error)."""
     files: list[Path] = []
     for p in paths:
         if p.is_dir():
@@ -125,7 +146,20 @@ def lint_paths(paths: list[Path], *, root: Path | None = None
                                 if "__pycache__" not in q.parts))
         elif p.suffix == ".py":
             files.append(p)
+    return files
+
+
+def lint_paths(paths: list[Path], *, root: Path | None = None
+               ) -> list[Violation]:
+    """Lint every ``.py`` file under the given files/directories. The
+    interprocedural rules see one shared Project spanning all of them —
+    callback wiring in one module resolves callees in another."""
+    from tools.dclint.flow import Project
+
+    root = root or REPO_ROOT
+    files = collect_files(paths)
+    project = Project.from_paths(files, root=root)
     out: list[Violation] = []
     for f in files:
-        out.extend(lint_file(f, root=root))
+        out.extend(lint_file(f, root=root, project=project))
     return out

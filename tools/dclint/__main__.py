@@ -10,7 +10,7 @@ import json
 import sys
 from pathlib import Path
 
-from tools.dclint import REPO_ROOT, Violation, lint_paths
+from tools.dclint import REPO_ROOT, Violation, collect_files, lint_paths
 from tools.dclint import baseline as baseline_mod
 
 JSON_SCHEMA_VERSION = 1
@@ -53,8 +53,10 @@ def main(argv: list[str] | None = None) -> int:
                     help="rewrite flagged findings in place (DC101 bare "
                          "asserts into guarded raises, DC201 numpy "
                          "global-RNG calls into seeded default_rng(0) "
-                         "generators), then re-lint; baseline entries "
-                         "paid down by the rewrite are pruned")
+                         "generators, DC301 re-entrant provider calls "
+                         "onto a CFG-validated post-drain deferral "
+                         "list), then re-lint; baseline entries paid "
+                         "down by the rewrite are pruned")
     ap.add_argument("--update-baseline", action="store_true",
                     help="prune stale entries from the baseline (burn-"
                          "down); never adds entries unless --rebaseline")
@@ -77,6 +79,11 @@ def main(argv: list[str] | None = None) -> int:
             q = root / q
         if not q.exists():
             print(f"dclint: path not found: {p}", file=sys.stderr)
+            return 2
+        # a scope containing zero Python files lints vacuously clean —
+        # which is how a typo'd path silently passes CI. Usage error.
+        if not collect_files([q]):
+            print(f"dclint: no Python files under: {p}", file=sys.stderr)
             return 2
         paths.append(q)
 

@@ -13,19 +13,28 @@ from pathlib import Path
 # rule -> path prefixes the rule runs on
 RULE_SCOPES: dict[str, tuple[str, ...]] = {
     # runtime invariants live in the control plane: emulator core,
-    # serve drivers, discrete-event sim
-    "DC101": ("src/repro/core", "src/repro/serve", "src/repro/sim"),
+    # serve drivers, discrete-event sim — and the linter itself (a
+    # stripped assert in dclint would silently un-enforce a contract
+    # under ``python -O``)
+    "DC101": ("src/repro/core", "src/repro/serve", "src/repro/sim",
+              "tools/dclint"),
     # deterministic replay + bench gating cover the control plane AND
-    # the benchmarks that gate on its numbers
+    # the benchmarks that gate on its numbers AND the linter (its
+    # findings feed CI gates, so its output must be replayable too)
     "DC201": ("src/repro/core", "src/repro/serve", "src/repro/sim",
-              "benchmarks"),
+              "benchmarks", "tools/dclint"),
     # grant callbacks are defined in the control plane
     "DC301": ("src/repro/core", "src/repro/serve", "src/repro/sim"),
+    # DC302 widens DC301 project-wide (flow layer): same scope
+    "DC302": ("src/repro/core", "src/repro/serve", "src/repro/sim"),
     # slot-vs-node-unit arithmetic happens where engine slots meet
     # provider grants: the serve layer
     "DC401": ("src/repro/serve",),
     # tracer safety is a kernels/ concern
     "DC501": ("src/repro/kernels",),
+    # tenant phase discipline: Tenant implementations live in the serve
+    # layer (the sim layer's REServer drivers predate the protocol)
+    "DC601": ("src/repro/serve",),
 }
 
 # rule -> path prefixes exempted even when a scope prefix matches

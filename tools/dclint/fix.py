@@ -39,12 +39,37 @@ expressions are spliced: calls spanning multiple lines, calls nested in
 another flagged call, or calls sharing a line with a flagged assert are
 skipped this pass (a second ``--fix`` run converges).
 
+DC301's re-entrant provider calls get the flow-analysis hoist the
+ROADMAP carried: a statement-level banned call inside a grant callback
+(or code it reaches) is deferred onto a post-drain application list::
+
+    self.provision.amend(req, n, t)   # mid-drain: DC301
+
+    ->  self._post_drain = getattr(self, '_post_drain', [])
+        self._post_drain.append(
+            lambda _f=self.provision.amend, _a=(req, n, t): _f(*_a))
+
+The callee and its arguments are captured *at the callback's own
+position* through lambda defaults, so the deferred application sees
+exactly the values the re-entrant call would have — the driver applies
+the list (``for f in tre._post_drain: f()``) after the triggering
+provider call returns, i.e. after ``_drain`` has unwound. The rewrite
+is guarded by the CFG: it is only applied when no statement reachable
+*after* the offender (rest of its basic block plus every reachable
+block — ``flow.cfg.nodes_after``) reads provider/ledger or parked-
+request state, because such a read would observe the pre-mutation
+ledger once the call is deferred. Offenders that fail the guard, sit
+mid-expression, use ``*args``/``**kwargs``, or live outside a method
+are skipped for a human.
+
 Only findings the linter itself reports are rewritten — the fix is driven
 from ``lint_file`` output, so rule scoping and ``# dclint: disable``
 pragmas are honored for free. Asserts that do not start their line
 (``if x: assert y``) are skipped and left flagged for a human. Rewrites
 are applied bottom-up so earlier positions stay valid; fixed findings
 then show up as *stale* baseline entries, which the CLI prunes.
+Every fixer is idempotent: its output re-lints clean for the code it
+rewrote, so a second ``--fix`` pass finds nothing left to do.
 """
 from __future__ import annotations
 
@@ -52,8 +77,15 @@ import ast
 from pathlib import Path
 
 from tools.dclint import REPO_ROOT, lint_file
+from tools.dclint.flow.cfg import build_cfg, evaluated_parts
+from tools.dclint.flow.dataflow import attr_loads
 
 __all__ = ["fix_file", "fix_paths"]
+
+#: receiver segments / attrs whose post-statement reads veto a deferral
+_PROVIDERISH = ("provision", "provider", "pager")
+_REQ_ATTRS = frozenset({"status", "nodes", "min_useful", "priority",
+                        "granted"})
 
 #: legacy ``np.random.<fn>`` -> seeded ``Generator.<method>`` (argument
 #: lists pass through verbatim; ``rand``/``randn`` varargs are tupled)
@@ -151,19 +183,64 @@ def _seeded_rng_call(node: ast.Call) -> str | None:
     return f"{prefix}.default_rng(0).{method}({arg_text})"
 
 
+def _post_drain_defer(call: ast.Call) -> str | None:
+    """The deferral text for one banned provider call (no indentation),
+    or None when the argument shape has no mechanical capture."""
+    if any(isinstance(a, ast.Starred) for a in call.args):
+        return None
+    if any(kw.arg is None for kw in call.keywords):
+        return None                      # **kwargs: order/content unknown
+    func_src = ast.unparse(call.func)
+    arg_text = ", ".join(ast.unparse(a) for a in call.args)
+    tup = "(" + arg_text + ("," if len(call.args) == 1 else "") + ")"
+    if call.keywords:
+        kd = ("{" + ", ".join(f"'{kw.arg}': {ast.unparse(kw.value)}"
+                              for kw in call.keywords) + "}")
+        lam = f"lambda _f={func_src}, _a={tup}, _k={kd}: _f(*_a, **_k)"
+    else:
+        lam = f"lambda _f={func_src}, _a={tup}: _f(*_a)"
+    return ("self._post_drain = getattr(self, '_post_drain', [])\n"
+            "self._post_drain.append(\n"
+            f"    {lam})")
+
+
+def _defer_is_safe(fn: ast.AST, stmt: ast.stmt) -> bool:
+    """True when nothing that may execute after ``stmt`` reads provider/
+    ledger or parked-request state — the CFG condition under which
+    moving the call's *effect* to post-drain is unobservable inside the
+    callback's own frame."""
+    cfg = build_cfg(fn)
+    for node in cfg.nodes_after(stmt):
+        for part in evaluated_parts(node):
+            for chain, attr, _ in attr_loads(part):
+                segs = (*chain, attr)
+                if any(p in seg for seg in segs for p in _PROVIDERISH):
+                    return False
+                if (attr in _REQ_ATTRS
+                        and any("req" in seg for seg in chain)):
+                    return False
+    return True
+
+
 def fix_file(path: Path, *, root: Path | None = None) -> tuple[int, int]:
-    """Rewrite flagged DC101 asserts and DC201 numpy-RNG calls in
-    ``path`` in place.
+    """Rewrite flagged DC101 asserts, DC201 numpy-RNG calls and DC301
+    re-entrant provider calls in ``path`` in place.
 
     -> ``(n_fixed, n_skipped)``; skipped findings are flagged but have
     no safe mechanical rewrite this pass (an assert not starting its
-    line, a multi-line or nested RNG call, an unmapped RNG method).
+    line, a multi-line or nested RNG call, an unmapped RNG method, a
+    provider call whose CFG downstream still reads provider state).
     """
     root = root or REPO_ROOT
     findings = lint_file(path, root=root)
     assert_lines = {v.line for v in findings if v.code == "DC101"}
     rng_marks = {(v.line, v.col) for v in findings if v.code == "DC201"}
-    if not assert_lines and not rng_marks:
+    # only the *call* findings are hoistable; direct ledger writes have
+    # no one mechanical deferral (the write may feed later reads)
+    defer_marks = {(v.line, v.col) for v in findings
+                   if v.code == "DC301"
+                   and "called from grant callback" in v.message}
+    if not assert_lines and not rng_marks and not defer_marks:
         return 0, 0
     src = path.read_text(encoding="utf-8")
     tree = ast.parse(src, filename=str(path))
@@ -195,16 +272,58 @@ def fix_file(path: Path, *, root: Path | None = None) -> tuple[int, int]:
                          + raw[hc:]).decode("utf-8")
         fixed += 1
 
-    # --- DC101: statement-level assert -> guarded-raise block rewrites
-    targets = [n for n in ast.walk(tree)
-               if isinstance(n, ast.Assert) and n.lineno in assert_lines]
-    for node in sorted(targets, key=lambda n: n.lineno, reverse=True):
+    # --- DC301: hoist banned provider calls onto the post-drain list.
+    # Only whole-statement calls (`ast.Expr` wrapping the flagged Call)
+    # qualify; the offender's innermost enclosing function must be a
+    # method (`self` in scope to hold the list) and the CFG guard must
+    # hold. Replacements are collected here and applied in the shared
+    # bottom-up statement pass below (they change line counts).
+    stmt_rewrites: list[tuple[ast.stmt, list[str]]] = []
+    if defer_marks:
+        fns = [n for n in ast.walk(tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        exprs = {(n.value.lineno, n.value.col_offset): n
+                 for n in ast.walk(tree)
+                 if isinstance(n, ast.Expr)
+                 and isinstance(n.value, ast.Call)}
+        for mark in sorted(defer_marks):
+            stmt = exprs.get(mark)
+            if stmt is None:                 # mid-expression offender
+                skipped += 1
+                continue
+            enclosing = [f for f in fns
+                         if f.lineno <= stmt.lineno
+                         and stmt.end_lineno <= f.end_lineno]
+            fn = max(enclosing, key=lambda f: f.lineno, default=None)
+            indent = lines[stmt.lineno - 1][:stmt.col_offset]
+            repl_src = _post_drain_defer(stmt.value)
+            if (fn is None or not fn.args.args
+                    or fn.args.args[0].arg != "self"
+                    or indent.strip() or repl_src is None
+                    or any(lo in range(stmt.lineno, stmt.end_lineno + 1)
+                           for lo, _ in rng_marks)
+                    or not _defer_is_safe(fn, stmt)):
+                skipped += 1
+                continue
+            stmt_rewrites.append(
+                (stmt, [indent + ln + "\n"
+                        for ln in repl_src.splitlines()]))
+
+    # --- DC101: statement-level assert -> guarded-raise block rewrites,
+    # applied together with the DC301 deferrals, bottom-up.
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assert)
+                and node.lineno in assert_lines):
+            continue
         indent = lines[node.lineno - 1][:node.col_offset]
         if indent.strip():
             skipped += 1
             continue
-        repl = [indent + ln + "\n"
-                for ln in _guarded_raise(node).splitlines()]
+        stmt_rewrites.append(
+            (node, [indent + ln + "\n"
+                    for ln in _guarded_raise(node).splitlines()]))
+    for node, repl in sorted(stmt_rewrites,
+                             key=lambda t: t[0].lineno, reverse=True):
         lines[node.lineno - 1:node.end_lineno] = repl
         fixed += 1
 

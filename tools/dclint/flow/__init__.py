@@ -1,0 +1,43 @@
+"""dcflow — the intra+interprocedural dataflow layer under dclint.
+
+Three stdlib-only pieces, each usable on its own:
+
+``flow.cfg``
+    per-function control-flow graphs over Python AST: basic blocks and
+    edges for branches, loops, ``try``/``with``, ``break``/``continue``
+    and early returns. ``build_cfg(fn).shape()`` is a stable golden form
+    for tests; ``reachable_from`` / ``nodes_after`` answer the "what can
+    still execute after this statement" queries the DC301 fixer needs.
+
+``flow.dataflow``
+    reaching definitions over a CFG (worklist, gen/kill per block) and
+    the field-write/read lexers the rules share: ``attr_writes`` (every
+    ``self.X`` / ``obj.attr`` mutation in a subtree), ``attr_reads``,
+    ``mutating_calls`` (``ledger.append/remove/pop/...``).
+
+``flow.project``
+    a project-wide index over many modules: classes with cross-module
+    MRO resolution, per-function call edges (bare names within a module,
+    ``self.``/``cls.`` methods virtually dispatched through the class
+    family, ``functools.partial``), and the callback edges that make
+    grant plumbing analyzable — ``on_grant=`` keyword wiring and
+    ``.grant_listener =`` assignment connect ``provider._drain``'s
+    ``req.on_grant(...)`` invocation to the tenant methods it lands in.
+
+DC302 (re-entrancy soundness) and DC601 (tenant phase discipline) are
+built on this layer; see ``tools/dclint/README.md`` for the rule-author
+API walkthrough.
+"""
+from __future__ import annotations
+
+from tools.dclint.flow.cfg import CFG, Block, build_cfg
+from tools.dclint.flow.dataflow import (
+    attr_reads, attr_writes, mutating_calls, reaching_definitions,
+)
+from tools.dclint.flow.project import FuncInfo, ClassInfo, Project
+
+__all__ = [
+    "CFG", "Block", "build_cfg",
+    "attr_reads", "attr_writes", "mutating_calls", "reaching_definitions",
+    "FuncInfo", "ClassInfo", "Project",
+]

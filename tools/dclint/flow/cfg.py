@@ -1,0 +1,288 @@
+"""Per-function control-flow graphs over Python AST.
+
+A :class:`CFG` is a list of basic blocks. Block 0 is the entry, block 1
+the (synthetic, empty) exit; every path out of the function — the final
+fall-through, each ``return``, each uncaught ``raise`` — edges into the
+exit block. Compound statements live in the block where their *header*
+is evaluated (an ``if``/``while`` test, a ``for`` iterable); their
+bodies get their own blocks with the usual edges:
+
+* ``if``: header -> then-block [-> else-block], both -> join; a missing
+  ``else`` adds the header -> join fall-through edge.
+* ``while``/``for``: header -> body -> header back-edge, header -> exit
+  edge (through the ``else`` suite when one exists); ``break`` edges to
+  the loop's after-block, ``continue`` back to the header.
+* ``try``: every block materialized while building the body gets an
+  exceptional edge to each handler entry (the sound over-approximation:
+  any statement in the suite may raise); body/``else``/handler ends
+  converge on the ``finally`` suite when present, else on a join block.
+* ``with``: linear — the items are evaluated in the current block and
+  the body continues in it (exceptional control flow is the enclosing
+  ``try``'s concern).
+* ``return``/``raise`` terminate their block (raise additionally
+  reaches enclosing handlers through the try-range edges above).
+
+The analyses downstream never walk a compound node's body through the
+block statement list — :func:`evaluated_parts` names exactly the
+sub-expressions a header evaluates, so reaching-defs and the rules see
+each expression exactly once, in the block where it executes.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+__all__ = ["Block", "CFG", "build_cfg", "evaluated_parts"]
+
+
+@dataclasses.dataclass
+class Block:
+    """One basic block: straight-line AST nodes + successor indices."""
+    idx: int
+    label: str = ""
+    stmts: list = dataclasses.field(default_factory=list)
+    succ: set = dataclasses.field(default_factory=set)
+
+
+def evaluated_parts(node: ast.AST) -> list[ast.AST]:
+    """The sub-nodes a block statement actually evaluates *at its own
+    position* — a compound statement contributes its header only (the
+    body has its own blocks)."""
+    if isinstance(node, (ast.If, ast.While)):
+        return [node.test]
+    if isinstance(node, (ast.For, ast.AsyncFor)):
+        return [node.iter, node.target]
+    if isinstance(node, (ast.With, ast.AsyncWith)):
+        out: list[ast.AST] = []
+        for item in node.items:
+            out.append(item.context_expr)
+            if item.optional_vars is not None:
+                out.append(item.optional_vars)
+        return out
+    if isinstance(node, ast.Return):
+        return [node.value] if node.value is not None else []
+    if isinstance(node, ast.Raise):
+        return [p for p in (node.exc, node.cause) if p is not None]
+    if isinstance(node, (ast.Try, ast.FunctionDef, ast.AsyncFunctionDef,
+                         ast.ClassDef)):
+        return []          # nothing evaluated at the header itself
+    if isinstance(node, ast.Match):
+        return [node.subject]
+    return [node]
+
+
+class CFG:
+    ENTRY = 0
+    EXIT = 1
+
+    def __init__(self, blocks: list[Block]):
+        self.blocks = blocks
+
+    # ------------------------------------------------------------ queries
+    def shape(self) -> list[tuple[int, str, tuple[int, ...]]]:
+        """Stable golden form: ``(idx, label, sorted successors)`` rows.
+        Labels are ``entry``/``exit`` or the comma-joined AST type names
+        of the block's statements (empty join blocks render as ``.``)."""
+        out = []
+        for b in self.blocks:
+            if b.label:
+                label = b.label
+            elif b.stmts:
+                label = ",".join(type(s).__name__ for s in b.stmts)
+            else:
+                label = "."
+            out.append((b.idx, label, tuple(sorted(b.succ))))
+        return out
+
+    def reachable_from(self, idx: int) -> set:
+        """Block indices reachable through successor edges (not
+        including ``idx`` itself unless a cycle returns to it)."""
+        seen: set[int] = set()
+        work = sorted(self.blocks[idx].succ)
+        while work:
+            i = work.pop()
+            if i in seen:
+                continue
+            seen.add(i)
+            work.extend(self.blocks[i].succ)
+        return seen
+
+    def find(self, node: ast.AST) -> tuple[int, int] | None:
+        """``(block idx, position)`` of a statement, by identity."""
+        for b in self.blocks:
+            for i, s in enumerate(b.stmts):
+                if s is node:
+                    return b.idx, i
+        return None
+
+    def nodes_after(self, node: ast.AST) -> list:
+        """Every block statement that may still execute after ``node``
+        completes: the rest of its block plus all blocks reachable from
+        it (a loop back-edge re-includes the whole block)."""
+        where = self.find(node)
+        if where is None:
+            return []
+        bi, pos = where
+        reach = self.reachable_from(bi)
+        out = list(self.blocks[bi].stmts[pos + 1:])
+        for i in sorted(reach):
+            out.extend(self.blocks[i].stmts)
+        return out
+
+
+class _Builder:
+    def __init__(self):
+        self.blocks: list[Block] = []
+
+    def new_block(self, label: str = "") -> int:
+        b = Block(idx=len(self.blocks), label=label)
+        self.blocks.append(b)
+        return b.idx
+
+    def edge(self, a: int, b: int) -> None:
+        self.blocks[a].succ.add(b)
+
+    def add(self, idx: int, node: ast.AST) -> None:
+        self.blocks[idx].stmts.append(node)
+
+    # ``loops`` is a stack of (header idx, after idx); ``cur`` is the
+    # open block. Returns the falling-through block or None when every
+    # path out of the suite terminated (return/raise/break/continue).
+    def seq(self, stmts, cur: int, loops: list) -> int | None:
+        for node in stmts:
+            if cur is None:       # unreachable code after a terminator:
+                cur = self.new_block()   # still modeled, no predecessors
+            if isinstance(node, (ast.If,)):
+                cur = self._if(node, cur, loops)
+            elif isinstance(node, (ast.While, ast.For, ast.AsyncFor)):
+                cur = self._loop(node, cur, loops)
+            elif isinstance(node, ast.Try):
+                cur = self._try(node, cur, loops)
+            elif isinstance(node, (ast.With, ast.AsyncWith)):
+                self.add(cur, node)
+                cur = self.seq(node.body, cur, loops)
+            elif isinstance(node, ast.Match):
+                cur = self._match(node, cur, loops)
+            elif isinstance(node, (ast.Return, ast.Raise)):
+                self.add(cur, node)
+                self.edge(cur, CFG.EXIT)
+                cur = None
+            elif isinstance(node, ast.Break):
+                if loops:
+                    self.edge(cur, loops[-1][1])
+                else:
+                    self.edge(cur, CFG.EXIT)
+                cur = None
+            elif isinstance(node, ast.Continue):
+                if loops:
+                    self.edge(cur, loops[-1][0])
+                else:
+                    self.edge(cur, CFG.EXIT)
+                cur = None
+            else:
+                self.add(cur, node)
+        return cur
+
+    def _if(self, node: ast.If, cur: int, loops: list) -> int | None:
+        self.add(cur, node)
+        ends = []
+        then = self.new_block()
+        self.edge(cur, then)
+        te = self.seq(node.body, then, loops)
+        if te is not None:
+            ends.append(te)
+        if node.orelse:
+            els = self.new_block()
+            self.edge(cur, els)
+            ee = self.seq(node.orelse, els, loops)
+            if ee is not None:
+                ends.append(ee)
+        else:
+            ends.append(cur)      # false edge falls through
+        if not ends:
+            return None
+        join = self.new_block()
+        for e in ends:
+            self.edge(e, join)
+        return join
+
+    def _loop(self, node, cur: int, loops: list) -> int:
+        header = self.new_block()
+        self.edge(cur, header)
+        self.add(header, node)
+        after = self.new_block()
+        body = self.new_block()
+        self.edge(header, body)
+        if node.orelse:
+            els = self.new_block()
+            self.edge(header, els)
+            ee = self.seq(node.orelse, els, loops)
+            if ee is not None:
+                self.edge(ee, after)
+        else:
+            self.edge(header, after)
+        be = self.seq(node.body, body, loops + [(header, after)])
+        if be is not None:
+            self.edge(be, header)
+        return after
+
+    def _try(self, node: ast.Try, cur: int, loops: list) -> int | None:
+        self.add(cur, node)
+        body = self.new_block()
+        self.edge(cur, body)
+        lo = len(self.blocks)
+        be = self.seq(node.body, body, loops)
+        if be is not None and node.orelse:
+            be = self.seq(node.orelse, be, loops)
+        hi = len(self.blocks)
+        h_entries = [self.new_block() for _ in node.handlers]
+        # any statement in the try suite may raise: every block built for
+        # it (plus the suite's entry block) edges to each handler
+        for bi in [body] + list(range(lo, hi)):
+            for h in h_entries:
+                self.edge(bi, h)
+        ends = [be] if be is not None else []
+        for h, handler in zip(h_entries, node.handlers):
+            self.blocks[h].stmts.extend(
+                [handler.type] if handler.type is not None else [])
+            he = self.seq(handler.body, h, loops)
+            if he is not None:
+                ends.append(he)
+        if node.finalbody:
+            fin = self.new_block()
+            for e in ends:
+                self.edge(e, fin)
+            if not ends:          # finally still runs on the raise path
+                self.edge(body, fin)
+            return self.seq(node.finalbody, fin, loops)
+        if not ends:
+            return None
+        join = self.new_block()
+        for e in ends:
+            self.edge(e, join)
+        return join
+
+    def _match(self, node, cur: int, loops: list) -> int | None:
+        self.add(cur, node)
+        ends = [cur]              # no case may match: fall through
+        for case in node.cases:
+            cb = self.new_block()
+            self.edge(cur, cb)
+            ce = self.seq(case.body, cb, loops)
+            if ce is not None:
+                ends.append(ce)
+        join = self.new_block()
+        for e in ends:
+            self.edge(e, join)
+        return join
+
+
+def build_cfg(fn) -> CFG:
+    """CFG of one ``FunctionDef``/``AsyncFunctionDef``."""
+    b = _Builder()
+    b.new_block("entry")          # idx 0
+    b.new_block("exit")           # idx 1
+    end = b.seq(fn.body, CFG.ENTRY, [])
+    if end is not None:
+        b.edge(end, CFG.EXIT)
+    return CFG(b.blocks)

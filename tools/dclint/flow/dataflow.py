@@ -1,0 +1,193 @@
+"""Dataflow over :mod:`tools.dclint.flow.cfg` CFGs.
+
+Two layers:
+
+* **Lexers** shared by the flow rules — :func:`attr_writes` (every
+  field mutated in a subtree, as ``(receiver chain, attr)``),
+  :func:`attr_loads` / :func:`attr_reads` (fields read),
+  :func:`mutating_calls` (container-method mutation like
+  ``ledger.admission_queue.remove(...)``) and :func:`calls` (every call
+  with its receiver chain). Receiver chains are leaf-first name
+  segments, the same orientation DC301 established:
+  ``self.provider.admission_queue`` -> ``("admission_queue",
+  "provider", "self")``.
+
+* **Reaching definitions** — the classic forward may-analysis: which
+  ``(name, line, col)`` binding sites can reach each block. Worklist
+  over the CFG, gen/kill per block from the statements' *evaluated
+  parts* (a ``for`` target generates in the loop header, an ``if``
+  body's bindings stay in the body block).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.dclint.flow.cfg import CFG, evaluated_parts
+
+__all__ = [
+    "chain_names", "attr_writes", "attr_loads", "attr_reads",
+    "mutating_calls", "calls", "bound_names", "reaching_definitions",
+]
+
+#: container methods that mutate their receiver in place
+MUTATORS = frozenset({
+    "append", "remove", "pop", "clear", "insert", "extend", "update",
+    "setdefault", "popitem", "add", "discard",
+})
+
+
+def chain_names(node: ast.AST) -> tuple[str, ...]:
+    """Name segments of an attribute/subscript/call chain, leaf-first:
+    ``self.a.b[0].c`` -> ``("c", "b", "a", "self")``."""
+    names: list[str] = []
+    while True:
+        if isinstance(node, ast.Attribute):
+            names.append(node.attr)
+            node = node.value
+        elif isinstance(node, ast.Subscript):
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        elif isinstance(node, ast.Name):
+            names.append(node.id)
+            return tuple(names)
+        else:
+            return tuple(names)
+
+
+def _write_targets(node: ast.AST):
+    if isinstance(node, ast.Assign):
+        return node.targets
+    if isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        return [node.target]
+    if isinstance(node, ast.Delete):
+        return node.targets
+    return []
+
+
+def attr_writes(node: ast.AST) -> list:
+    """Every attribute-field mutation in the subtree, as
+    ``(receiver_chain, attr, stmt_node)``. Covers plain/augmented/
+    annotated assignment and ``del``; a subscript store like
+    ``self._work[jid] = v`` counts as a write to ``_work``."""
+    out = []
+    for n in ast.walk(node):
+        for tgt in _write_targets(n):
+            t = tgt
+            while isinstance(t, (ast.Subscript, ast.Starred)):
+                t = t.value
+            if isinstance(t, ast.Attribute):
+                out.append((chain_names(t.value), t.attr, n))
+            elif isinstance(t, ast.Tuple):
+                for el in t.elts:
+                    e = el
+                    while isinstance(e, (ast.Subscript, ast.Starred)):
+                        e = e.value
+                    if isinstance(e, ast.Attribute):
+                        out.append((chain_names(e.value), e.attr, n))
+    return out
+
+
+def attr_loads(node: ast.AST) -> list:
+    """Every attribute read in the subtree, as ``(receiver_chain, attr,
+    node)``."""
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and isinstance(n.ctx, ast.Load):
+            out.append((chain_names(n.value), n.attr, n))
+    return out
+
+
+def attr_reads(node: ast.AST, base: str = "self") -> set:
+    """Attr names read directly on ``base`` (``self.X`` loads)."""
+    return {attr for chain, attr, _ in attr_loads(node)
+            if chain == (base,)}
+
+
+def mutating_calls(node: ast.AST) -> list:
+    """In-place container mutations: calls to a :data:`MUTATORS` method,
+    as ``(receiver_chain, method, call_node)`` — the chain covers the
+    whole receiver (``self.provider.admission_queue.remove`` ->
+    ``("admission_queue", "provider", "self")``)."""
+    out = []
+    for n in ast.walk(node):
+        if (isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+                and n.func.attr in MUTATORS):
+            out.append((chain_names(n.func.value), n.func.attr, n))
+    return out
+
+
+def calls(node: ast.AST) -> list:
+    """Every call in the subtree as ``(receiver_chain, name, call_node)``
+    — the chain is empty for bare-name calls."""
+    out = []
+    for n in ast.walk(node):
+        if not isinstance(n, ast.Call):
+            continue
+        if isinstance(n.func, ast.Attribute):
+            out.append((chain_names(n.func.value), n.func.attr, n))
+        elif isinstance(n.func, ast.Name):
+            out.append(((), n.func.id, n))
+    return out
+
+
+def bound_names(node: ast.AST) -> list:
+    """``(name, line, col)`` for every name *bound* in the subtree
+    (assignment targets, loop/with targets, walrus)."""
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+            out.append((n.id, n.lineno, n.col_offset))
+        elif isinstance(n, ast.NamedExpr):
+            t = n.target
+            out.append((t.id, t.lineno, t.col_offset))
+    return out
+
+
+def reaching_definitions(cfg: CFG, fn=None) -> dict:
+    """Reaching definitions per block: ``{idx: (in_set, out_set)}`` of
+    ``(name, line, col)`` binding sites. Pass the ``FunctionDef`` as
+    ``fn`` to seed the entry block with the parameter bindings."""
+    gen: dict[int, dict[str, set]] = {}
+    for b in cfg.blocks:
+        g: dict[str, set] = {}
+        for stmt in b.stmts:
+            for part in evaluated_parts(stmt):
+                for name, line, col in bound_names(part):
+                    g[name] = {(name, line, col)}   # later defs kill earlier
+        gen[b.idx] = g
+    if fn is not None:
+        a = fn.args
+        params = [*a.posonlyargs, *a.args, *a.kwonlyargs]
+        if a.vararg:
+            params.append(a.vararg)
+        if a.kwarg:
+            params.append(a.kwarg)
+        entry = gen[CFG.ENTRY]
+        for p in params:
+            entry.setdefault(p.arg, {(p.arg, p.lineno, p.col_offset)})
+
+    preds: dict[int, list[int]] = {b.idx: [] for b in cfg.blocks}
+    for b in cfg.blocks:
+        for s in b.succ:
+            preds[s].append(b.idx)
+
+    in_map: dict[int, set] = {b.idx: set() for b in cfg.blocks}
+    out_map: dict[int, set] = {b.idx: set() for b in cfg.blocks}
+    work = [b.idx for b in cfg.blocks]
+    while work:
+        i = work.pop(0)
+        new_in: set = set()
+        for p in preds[i]:
+            new_in |= out_map[p]
+        killed_names = set(gen[i])
+        new_out = {d for d in new_in if d[0] not in killed_names}
+        for defs in gen[i].values():
+            new_out |= defs
+        if new_in != in_map[i] or new_out != out_map[i]:
+            in_map[i] = new_in
+            out_map[i] = new_out
+            for s in cfg.blocks[i].succ:
+                if s not in work:
+                    work.append(s)
+    return {i: (in_map[i], out_map[i]) for i in in_map}

@@ -1,0 +1,341 @@
+"""Project index + call graph over many modules.
+
+:class:`Project` parses (or is handed) a set of modules and indexes
+every function and class. Call edges are resolved conservatively:
+
+* bare-name calls -> a module-level function of the *same* module,
+* ``self.X()`` / ``cls.X()`` -> ``X`` virtually dispatched through the
+  enclosing class *family* (MRO by base-name resolution across modules,
+  plus subclass overrides — the sound answer for a driver that calls a
+  hook its subclass overrides),
+* ``functools.partial(self.X, ...)`` keeps the edge to ``X``,
+* ``SomeClass.method(obj, ...)`` -> the explicit base-call edge when
+  ``SomeClass`` names a known class,
+* **callback edges**: a call through an attribute named ``on_grant`` or
+  ``grant_listener`` (``req.on_grant(offer, t)``, ``self.
+  grant_listener(...)``) edges to every function wired *anywhere in the
+  project* via ``on_grant=<fn>`` keyword arguments or
+  ``<obj>.grant_listener = <fn>`` / ``on_grant = <fn>`` assignment.
+  This is what connects ``ResourceProvider._drain`` to
+  ``RuntimeEnv._apply_grant`` and on into the tenants' ``_on_grant``
+  listeners without importing anything.
+
+The index is syntactic — no imports are executed — so name collisions
+across modules resolve to *all* same-named candidates. For the rules
+this over-approximation errs exactly the right way: reachability may
+include a method it shouldn't, never miss one it should.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+
+__all__ = ["FuncInfo", "ClassInfo", "Project", "CALLBACK_NAMES"]
+
+#: attribute/keyword names that wire grant callbacks
+CALLBACK_NAMES = ("on_grant", "grant_listener")
+
+
+@dataclasses.dataclass(eq=False)
+class FuncInfo:
+    """One function or method definition."""
+    rel: str                     # module path (repo-relative posix)
+    name: str                    # bare function name
+    qualname: str                # "Class.name" for methods, else name
+    cls: str | None              # enclosing class name, or None
+    node: ast.AST                # the FunctionDef/AsyncFunctionDef
+
+    @property
+    def key(self) -> str:
+        return f"{self.rel}::{self.qualname}"
+
+
+@dataclasses.dataclass(eq=False)
+class ClassInfo:
+    """One class definition: methods, base names, hook aliases."""
+    rel: str
+    name: str
+    bases: tuple
+    methods: dict               # name -> FuncInfo (last def wins)
+    aliases: dict               # class-level ``hook = method`` renames
+    node: ast.AST
+
+
+def _base_name(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _callee_name(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+class Project:
+    def __init__(self, sources: dict):
+        """``sources`` maps repo-relative path -> parsed ``ast.Module``."""
+        self.modules: dict[str, ast.AST] = dict(sources)
+        self.classes: dict[str, list[ClassInfo]] = {}
+        self.module_functions: dict[str, dict[str, FuncInfo]] = {}
+        self.functions: list[FuncInfo] = []
+        #: callback kind -> set[FuncInfo] wired to it anywhere
+        self.callback_targets: dict[str, set] = {
+            k: set() for k in CALLBACK_NAMES}
+        self._callgraph: dict | None = None
+        self._cache: dict = {}    # scratch space for rule memoization
+        for rel, tree in self.modules.items():
+            self._index_module(rel, tree)
+        for rel, tree in self.modules.items():
+            self._collect_callbacks(rel, tree)
+
+    # ------------------------------------------------------ construction
+    @classmethod
+    def from_paths(cls, files, *, root: Path) -> "Project":
+        from tools.dclint import config
+        sources = {}
+        for f in files:
+            rel = config.relpath(f, root)
+            try:
+                tree = ast.parse(f.read_text(encoding="utf-8"),
+                                 filename=str(f))
+            except (OSError, UnicodeDecodeError, SyntaxError):
+                continue          # lint_file reports these as DC000
+            sources[rel] = tree
+        return cls(sources)
+
+    def _index_module(self, rel: str, tree: ast.AST) -> None:
+        mod_fns: dict[str, FuncInfo] = {}
+        self.module_functions[rel] = mod_fns
+
+        def visit(node, cls_name, qual_prefix):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    qual = (f"{qual_prefix}.{child.name}" if qual_prefix
+                            else child.name)
+                    fi = FuncInfo(rel=rel, name=child.name, qualname=qual,
+                                  cls=cls_name, node=child)
+                    self.functions.append(fi)
+                    if cls_name is None and not qual_prefix:
+                        mod_fns[child.name] = fi
+                    if cls_name is not None and qual_prefix == cls_name:
+                        self.classes[cls_name][-1].methods[child.name] = fi
+                    visit(child, cls_name, qual)
+                elif isinstance(child, ast.ClassDef):
+                    ci = ClassInfo(
+                        rel=rel, name=child.name,
+                        bases=tuple(b for b in map(_base_name, child.bases)
+                                    if b),
+                        methods={}, aliases={}, node=child)
+                    self.classes.setdefault(child.name, []).append(ci)
+                    for stmt in child.body:
+                        if (isinstance(stmt, ast.Assign)
+                                and isinstance(stmt.value, ast.Name)):
+                            for tgt in stmt.targets:
+                                if isinstance(tgt, ast.Name):
+                                    ci.aliases[tgt.id] = stmt.value.id
+                    visit(child, child.name, child.name)
+
+        visit(tree, None, "")
+
+    def _collect_callbacks(self, rel: str, tree: ast.AST) -> None:
+        # enclosing-class context matters for resolving ``self._fn``
+        def visit(node, cls_name):
+            for child in ast.iter_child_nodes(node):
+                inner_cls = (child.name if isinstance(child, ast.ClassDef)
+                             else cls_name)
+                if isinstance(child, ast.Call):
+                    for kw in child.keywords:
+                        if kw.arg in CALLBACK_NAMES:
+                            self._wire(kw.arg, kw.value, cls_name, rel)
+                elif isinstance(child, ast.Assign):
+                    for tgt in child.targets:
+                        name = None
+                        if isinstance(tgt, ast.Attribute):
+                            name = tgt.attr
+                        elif isinstance(tgt, ast.Name):
+                            name = tgt.id
+                        if name in CALLBACK_NAMES:
+                            self._wire(name, child.value, cls_name, rel)
+                visit(child, inner_cls)
+
+        visit(tree, None)
+        # a literal ``def on_grant`` is a root by definition
+        for fi in self.functions:
+            if fi.rel == rel and fi.name in CALLBACK_NAMES:
+                self.callback_targets[fi.name].add(fi)
+
+    def _wire(self, kind: str, value: ast.AST, cls_name: str | None,
+              rel: str) -> None:
+        # unwrap functools.partial(fn, ...)
+        if (isinstance(value, ast.Call)
+                and _callee_name(value.func) == "partial" and value.args):
+            value = value.args[0]
+        for fi in self._resolve_ref(value, cls_name, rel):
+            self.callback_targets[kind].add(fi)
+
+    def _resolve_ref(self, value: ast.AST, cls_name: str | None,
+                     rel: str) -> list:
+        """Functions a reference expression may denote."""
+        if isinstance(value, ast.Attribute):
+            base = value.value
+            if isinstance(base, ast.Name) and base.id in ("self", "cls") \
+                    and cls_name is not None:
+                return self.resolve_method(cls_name, value.attr,
+                                           virtual=True)
+            # obj.method on an unknown receiver: every method of that
+            # name anywhere (conservative)
+            return [fi for fi in self.functions if fi.name == value.attr
+                    and fi.cls is not None]
+        if isinstance(value, ast.Name):
+            fi = self.module_functions.get(rel, {}).get(value.id)
+            if fi is not None:
+                return [fi]
+            return [f for f in self.functions if f.name == value.id
+                    and f.cls is None]
+        return []
+
+    # -------------------------------------------------------- resolution
+    def mro(self, cls_name: str) -> list:
+        """All ClassInfos of ``cls_name`` plus its (transitive) bases,
+        nearest-first, by project-wide base-name matching."""
+        out, seen, work = [], set(), [cls_name]
+        while work:
+            name = work.pop(0)
+            if name in seen:
+                continue
+            seen.add(name)
+            for ci in self.classes.get(name, ()):
+                out.append(ci)
+                work.extend(ci.bases)
+        return out
+
+    def subclasses(self, cls_name: str) -> list:
+        """ClassInfos that (transitively) list ``cls_name`` as a base."""
+        out = []
+        for name, infos in self.classes.items():
+            if name == cls_name:
+                continue
+            for ci in infos:
+                if any(m.name == cls_name for m in self.mro(name)[1:]
+                       ) or cls_name in ci.bases:
+                    out.append(ci)
+                    break
+        return out
+
+    def resolve_method(self, cls_name: str, meth: str, *,
+                       virtual: bool = False) -> list:
+        """Defs of ``meth`` for a ``self.meth`` call inside ``cls_name``:
+        the nearest MRO definition (following class-level aliases), plus
+        every subclass override when ``virtual``."""
+        out: list[FuncInfo] = []
+        for ci in self.mro(cls_name):
+            meth = ci.aliases.get(meth, meth)
+            if meth in ci.methods:
+                out.append(ci.methods[meth])
+                break
+        if virtual:
+            for ci in self.subclasses(cls_name):
+                if meth in ci.methods:
+                    out.append(ci.methods[meth])
+        return out
+
+    # --------------------------------------------------------- call graph
+    def edges(self, fi: FuncInfo) -> set:
+        """Outgoing call edges of one function (see module docstring
+        for the resolution rules)."""
+        out: set[FuncInfo] = set()
+        for node in ast.walk(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if isinstance(func, ast.Name):
+                tgt = self.module_functions.get(fi.rel, {}).get(func.id)
+                if tgt is not None:
+                    out.add(tgt)
+            elif isinstance(func, ast.Attribute):
+                if func.attr in CALLBACK_NAMES:
+                    out |= self.callback_targets[func.attr]
+                if isinstance(func.value, ast.Name):
+                    recv = func.value.id
+                    if recv in ("self", "cls") and fi.cls is not None:
+                        out.update(self.resolve_method(
+                            fi.cls, func.attr, virtual=True))
+                    elif recv in self.classes:
+                        out.update(self.resolve_method(recv, func.attr))
+            # functools.partial(self._fn, ...) keeps the edge
+            if _callee_name(func) == "partial" and node.args:
+                out.update(self._resolve_ref(node.args[0], fi.cls, fi.rel))
+        return out
+
+    def callgraph(self) -> dict:
+        """``{caller key: set of callee keys}`` over every function.
+        Keys are ``"<rel>::<qualname>"`` strings (see FuncInfo.key)."""
+        if self._callgraph is None:
+            self._callgraph = {
+                fi.key: {t.key for t in self.edges(fi)}
+                for fi in self.functions}
+        return self._callgraph
+
+    def reachable(self, roots) -> dict:
+        """BFS closure from root FuncInfos: ``{FuncInfo: call path}``
+        where the path is a tuple of function names root-first (the
+        DC301-style ``via a -> b -> c`` diagnostic)."""
+        paths: dict[FuncInfo, tuple] = {}
+        queue = []
+        for r in sorted(roots, key=lambda f: f.key):
+            if r not in paths:
+                paths[r] = (r.name,)
+                queue.append(r)
+        while queue:
+            fi = queue.pop(0)
+            for callee in sorted(self.edges(fi), key=lambda f: f.key):
+                if callee not in paths:
+                    paths[callee] = paths[fi] + (callee.name,)
+                    queue.append(callee)
+        return paths
+
+    # -------------------------------------------------- drain read model
+    def drain_read_attrs(self) -> frozenset:
+        """The provider ledger fields ``_drain``'s loop reads, computed
+        from the project: every ``self.X`` load in ``_drain`` and the
+        self-methods it calls (``headroom`` -> allocated/quotas/
+        reservations/capacity), minus the class family's own method
+        names. Falls back to the documented set when no ``_drain``
+        exists in the project (single-file fixture runs)."""
+        key = "drain_read_attrs"
+        if key in self._cache:
+            return self._cache[key]
+        from tools.dclint.flow.dataflow import attr_reads
+        drains = [fi for fi in self.functions
+                  if fi.name == "_drain" and fi.cls is not None]
+        reads: set[str] = set()
+        for d in drains:
+            family = self.mro(d.cls)
+            method_names = {m for ci in family for m in ci.methods}
+            closure = self.reachable([d])
+            for fi in closure:
+                if fi.cls is None or not any(
+                        ci.name == fi.cls for ci in family):
+                    continue      # stay inside the provider class family
+                reads |= attr_reads(fi.node, "self")
+            reads -= method_names
+        if not reads:
+            reads = set(DEFAULT_DRAIN_READS)
+        out = frozenset(reads)
+        self._cache[key] = out
+        return out
+
+
+#: fallback when the linted set of files does not contain ``_drain``
+DEFAULT_DRAIN_READS = frozenset({
+    "_draining", "admission_queue", "allocated", "quotas",
+    "reservations", "capacity", "policy",
+})

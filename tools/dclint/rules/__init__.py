@@ -1,14 +1,20 @@
 """Rule registry. Each rule module exposes ``CODE``, ``SUMMARY`` and
 ``check(tree, src_lines, rel_path) -> iterable[(line, col, message)]``;
-scoping and pragma/baseline handling live in the driver."""
+scoping and pragma/baseline handling live in the driver. Flow-based
+rules additionally expose ``check_project(project, tree, src_lines,
+rel_path)`` — the driver prefers it and passes the shared
+:class:`tools.dclint.flow.Project` built over every file being linted,
+so interprocedural analyses see the whole control plane at once."""
 from __future__ import annotations
 
 from tools.dclint.rules import (
     dc101_invariant_assert,
     dc201_determinism,
     dc301_drain_reentrancy,
+    dc302_reentrancy_soundness,
     dc401_unit_discipline,
     dc501_tracer_safety,
+    dc601_phase_discipline,
 )
 
 RULES = {
@@ -17,7 +23,9 @@ RULES = {
         dc101_invariant_assert,
         dc201_determinism,
         dc301_drain_reentrancy,
+        dc302_reentrancy_soundness,
         dc401_unit_discipline,
         dc501_tracer_safety,
+        dc601_phase_discipline,
     )
 }

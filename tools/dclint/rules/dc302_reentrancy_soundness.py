@@ -1,0 +1,129 @@
+"""DC302 — re-entrancy soundness of grant-callback field writes.
+
+DC301 bans *API re-entry* (``request``/``release``/``amend``/``cancel``)
+from grant callbacks, intra-module. DC302 closes the remaining hole with
+the flow layer: any method reachable — project-wide, through the call
+graph's ``on_grant=``/``grant_listener`` callback edges — from a grant
+callback must not *write a ledger field that* ``ResourceProvider._drain``
+*'s loop reads*. The drain is iterating ``admission_queue`` and judging
+offers against ``headroom()`` (``allocated``/``quotas``/``reservations``/
+``capacity``) while the callback runs; a direct field write (assignment,
+``del``, or an in-place container mutation like ``admission_queue.
+remove(...)``) corrupts the very state the loop is walking. Writes to a
+parked request's own arbitration fields (``status``/``nodes``/
+``min_useful``/``priority``) are the same hazard — the loop re-reads
+them every grant round.
+
+The read set is *computed* from the project — ``_drain`` plus its
+self-call closure — so the rule tracks the drain loop as it evolves; the
+``PagedKVAllocator`` page-ledger fields ride along as a fixed lexicon
+(``check_conservation`` sweeps them between ticks the same way).
+
+The documented mutation channel is exempt by construction: the
+amend/cancel/release API *bodies* live in the provider class family
+(``ProvisionService``/``ResourceProvider``/``PagedKVAllocator`` or any
+class defining ``_drain``), and DC302 never flags writes inside that
+family — those methods are the ledger's own, maintained to be
+drain-consistent. Callbacks reach them only through calls, which DC301
+already polices.
+
+Fix pattern: defer the mutation — validate the offer, commit tenant-
+local bookkeeping, and park any provider traffic on a post-drain
+application list (``dclint --fix`` performs exactly this hoist for
+statement-level DC301 offenders; see ``tools/dclint/fix.py``).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.dclint.flow.dataflow import attr_writes, mutating_calls
+from tools.dclint.flow.project import Project
+
+CODE = "DC302"
+SUMMARY = ("grant-callback-reachable code writes a ledger field the "
+           "provider drain loop reads")
+
+#: class names whose internals ARE the documented mutation API
+_KNOWN_LEDGER_CLASSES = frozenset({
+    "ProvisionService", "ResourceProvider", "PagedKVAllocator",
+})
+#: page-ledger fields of the paged allocator (conservation-swept)
+_PAGER_LEDGER = frozenset({
+    "_free", "_owned", "_tenant_of", "_quota", "peak_used",
+})
+#: parked-request fields the drain loop re-reads every round
+_REQ_ATTRS = frozenset({"status", "nodes", "min_useful", "priority"})
+_PROVIDERISH = ("provision", "provider", "pager")
+
+
+def _providerish(chain) -> bool:
+    return any(p in seg for p in _PROVIDERISH for seg in chain)
+
+
+def _reqish(chain) -> bool:
+    return any("req" in seg for seg in chain)
+
+
+def _ledger_class_names(project: Project) -> set:
+    names = set(_KNOWN_LEDGER_CLASSES)
+    for infos in project.classes.values():
+        for ci in infos:
+            if "_drain" in ci.methods:
+                names.add(ci.name)
+                names.update(m.name for m in project.mro(ci.name))
+    return names
+
+
+def _analyze(project: Project) -> list:
+    """Full-project findings, memoized on the project:
+    ``(rel, line, col, message)`` rows."""
+    if "dc302" in project._cache:
+        return project._cache["dc302"]
+    findings: list = []
+    roots: set = set()
+    for targets in project.callback_targets.values():
+        roots |= targets
+    if roots:
+        exempt = _ledger_class_names(project)
+        ledger = project.drain_read_attrs() | _PAGER_LEDGER
+        closure = project.reachable(roots)
+        for fi, path in sorted(closure.items(), key=lambda kv: kv[0].key):
+            if fi.cls in exempt:
+                continue
+            via = (" via " + " -> ".join(path)) if len(path) > 1 else ""
+            root = path[0]
+
+            def flag(node, what):
+                findings.append((
+                    fi.rel, node.lineno, node.col_offset,
+                    f"{what} in `{fi.qualname}`, reachable from grant "
+                    f"callback `{root}`{via}: the provider may be "
+                    f"mid-drain and its loop reads this state — go "
+                    f"through the amend/cancel/release API, or defer "
+                    f"to a post-drain list"))
+
+            for chain, attr, node in attr_writes(fi.node):
+                if attr in ledger and _providerish(chain):
+                    flag(node, f"ledger field `{attr}` written")
+                elif attr in _REQ_ATTRS and _reqish(chain):
+                    flag(node, f"parked-request field `{attr}` written")
+            for chain, meth, node in mutating_calls(fi.node):
+                touched = ledger.intersection(chain)
+                if touched and _providerish(chain):
+                    flag(node, f"ledger field `{sorted(touched)[0]}` "
+                               f"mutated in place (`.{meth}()`)")
+    findings.sort()
+    project._cache["dc302"] = findings
+    return findings
+
+
+def check_project(project: Project, tree: ast.AST, src_lines, rel):
+    for frel, line, col, msg in _analyze(project):
+        if frel == rel:
+            yield line, col, msg
+
+
+def check(tree: ast.AST, src_lines, rel):
+    """Single-file fallback (no project handed in): analyze this module
+    as a one-file project."""
+    yield from check_project(Project({rel: tree}), tree, src_lines, rel)

@@ -1,0 +1,229 @@
+"""DC601 — tenant phase discipline.
+
+The ``Tenant`` protocol assigns each tick phase a job, and the fleet's
+correctness argument (weighted isolation, event-skip parity, same-tick
+preemption-to-grant flow) leans on hooks doing *only* that job:
+
+=================  ====================================================
+hook               grant/ledger traffic it may generate
+=================  ====================================================
+``begin_tick``     none — intake only; it runs before the tick's
+                   provider state settles, so it must not even *read*
+                   grant state
+``pre_step``       releases (``release_check``/``yield_nodes``/
+                   ``release``/``preempt``/``cancel``) and elastic
+                   ``shrink`` — vacated nodes must drain to parked
+                   foreign requests within the same tick
+``post_step``      finish accounting (``finish``/``finish_positions``)
+                   and the shrink that returns elastic growth
+``control``        negotiation (``scan``/``request``/
+                   ``submit_request``/``amend``/``acquire``/``grow``)
+``flush``          batched admissions (``admit_many``/
+                   ``admit_positions``/``admit``)
+``check_invariants``, ``accumulate``
+                   none — read/raise and stats integrals
+``next_event_tick``, ``skip_quiet_stats``
+                   none, and **pure** w.r.t. grant/ledger state — the
+                   event-skip fast path must be bit-identical to the
+                   dense ticks it replaces
+=================  ====================================================
+
+Additionally no hook, in any phase, may *assign* grant-ledger state
+directly (``env.owned``, ``env.busy``, provider ``allocated``/
+``admission_queue``/...) — mutation goes through the env/provider API,
+which keeps the idle integrals and the lease ledger consistent.
+
+Detection: tenant classes are found by base name (``Tenant`` anywhere
+in the project-resolved MRO) or structurally (three or more hook
+definitions); each hook is resolved through the MRO — including
+class-level ``hook = _method`` aliases — and walked interprocedurally
+through its ``self.`` helper methods (virtual dispatch includes
+subclass overrides) and same-module functions. Category calls are
+judged at the call site (``self.env.scan()`` is negotiation wherever it
+appears); the env/provider bodies themselves are out of scope — they
+are the sanctioned API boundary.
+
+``teardown``/``finalize``/``retired``/``rollup`` run outside the tick
+and carry no phase restriction.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.dclint.flow.dataflow import (
+    attr_loads, attr_writes, calls, mutating_calls,
+)
+from tools.dclint.flow.project import Project
+
+CODE = "DC601"
+SUMMARY = ("tenant hook mutates grant/ledger state outside its "
+           "assigned phase")
+
+#: API-call categories, by bare method name at the call site
+_CATEGORIES = {
+    "negotiate": frozenset({"scan", "submit_request", "amend", "acquire",
+                            "grow", "request"}),
+    "release": frozenset({"release_check", "yield_nodes", "release",
+                          "preempt", "cancel", "cancel_pending"}),
+    "finish": frozenset({"finish", "finish_positions"}),
+    "shrink": frozenset({"shrink"}),
+    "admit": frozenset({"admit_many", "admit_positions", "admit"}),
+}
+#: hook -> categories it may invoke; "pure" additionally bans state
+#: writes, "no_reads" bans grant-state *loads* (intake runs first)
+_HOOKS: dict = {
+    "begin_tick": {"allowed": frozenset(), "no_reads": True},
+    "pre_step": {"allowed": frozenset({"release", "shrink"})},
+    "post_step": {"allowed": frozenset({"finish", "shrink"})},
+    "control": {"allowed": frozenset({"negotiate"})},
+    "flush": {"allowed": frozenset({"admit"})},
+    "check_invariants": {"allowed": frozenset()},
+    "accumulate": {"allowed": frozenset()},
+    "next_event_tick": {"allowed": frozenset(), "pure": True},
+    "skip_quiet_stats": {"allowed": frozenset(), "pure": True},
+}
+#: grant/ledger state: env grant bookkeeping + provider/pager ledgers
+_GRANT_STATE = frozenset({
+    "owned", "busy", "granted", "_pending_req", "allocated",
+    "admission_queue", "open_leases", "closed_leases", "quotas",
+    "reservations", "_free", "_tenant_of", "_quota",
+})
+#: receiver segments that mark a call/load as env/provider traffic
+_RECV_SEGS = ("env", "provision", "provider", "engine", "pager", "pool")
+
+
+def _category_of(name: str) -> str | None:
+    for cat, names in _CATEGORIES.items():
+        if name in names:
+            return cat
+    return None
+
+
+def _phases_allowing(cat: str) -> str:
+    hooks = sorted(h for h, spec in _HOOKS.items()
+                   if cat in spec["allowed"])
+    return "/".join(hooks) if hooks else "no tick phase"
+
+
+def _receiverish(chain) -> bool:
+    if not chain:
+        return False
+    return chain[-1] == "self" or any(
+        any(r in seg for r in _RECV_SEGS) for seg in chain)
+
+
+def _is_tenant_class(project: Project, ci) -> bool:
+    if any(m.name == "Tenant" for m in project.mro(ci.name)):
+        return True
+    if "Tenant" in ci.bases:          # unresolved base, fixtures
+        return True
+    hooks = set(_HOOKS) | {"teardown", "finalize"}
+    defined = sum(1 for m in ci.methods if m in hooks)
+    defined += sum(1 for a in ci.aliases if a in hooks)
+    return defined >= 3
+
+
+def _family(project: Project, ci) -> set:
+    names = {m.name for m in project.mro(ci.name)}
+    names.update(s.name for s in project.subclasses(ci.name))
+    names.add(ci.name)
+    return names
+
+
+def _hook_closure(project: Project, ci, hook: str) -> dict:
+    """Tenant-side functions reachable from ``ci``'s ``hook``:
+    ``{FuncInfo: path}``. Traversal stays inside the class family and
+    the same-module helpers — env/provider calls are judged at the call
+    site, not entered."""
+    entry = project.resolve_method(ci.name, hook)
+    family = _family(project, ci)
+    paths: dict = {}
+    queue = []
+    for fi in entry:
+        paths[fi] = (f"{ci.name}.{hook}",)
+        queue.append(fi)
+    while queue:
+        fi = queue.pop(0)
+        for callee in sorted(project.edges(fi), key=lambda f: f.key):
+            in_scope = (callee.cls in family
+                        or (callee.cls is None and callee.rel == fi.rel))
+            if in_scope and callee not in paths:
+                paths[callee] = paths[fi] + (callee.name,)
+                queue.append(callee)
+    return paths
+
+
+def _analyze(project: Project) -> list:
+    if "dc601" in project._cache:
+        return project._cache["dc601"]
+    findings: list = []
+    seen: set = set()
+    tenant_classes = [
+        ci for infos in project.classes.values() for ci in infos
+        if _is_tenant_class(project, ci)]
+    for ci in sorted(tenant_classes, key=lambda c: (c.rel, c.name)):
+        for hook, spec in _HOOKS.items():
+            for fi, path in _hook_closure(project, ci, hook).items():
+                via = (" via " + " -> ".join(path[1:])
+                       if len(path) > 1 else "")
+                loc = f"hook `{path[0]}`{via}"
+
+                def flag(node, kind, msg):
+                    key = (node.lineno, node.col_offset, hook, kind)
+                    if key not in seen:
+                        seen.add(key)
+                        findings.append((fi.rel, node.lineno,
+                                         node.col_offset, msg))
+
+                for chain, name, node in calls(fi.node):
+                    if chain == ("self",):
+                        continue      # helper call: traversed, not judged
+                    cat = _category_of(name)
+                    if (cat and _receiverish(chain)
+                            and cat not in spec["allowed"]):
+                        what = ("is event-skip-pure: no grant/ledger "
+                                "traffic may originate here"
+                                if spec.get("pure") else
+                                f"may not {cat}; that belongs in "
+                                f"{_phases_allowing(cat)}")
+                        flag(node, cat,
+                             f"`{ast.unparse(node.func)}()` ({cat}) "
+                             f"called from {loc}: `{hook}` {what}")
+                for chain, attr, node in attr_writes(fi.node):
+                    if attr in _GRANT_STATE and _receiverish(chain):
+                        flag(node, "write",
+                             f"grant-ledger state `{attr}` assigned "
+                             f"from {loc}: mutate through the "
+                             f"env/provider API, never directly")
+                if spec.get("pure"):
+                    for chain, meth, node in mutating_calls(fi.node):
+                        touched = _GRANT_STATE.intersection(chain)
+                        if touched and _receiverish(chain):
+                            flag(node, "mut",
+                                 f"grant-ledger state "
+                                 f"`{sorted(touched)[0]}` mutated "
+                                 f"(`.{meth}()`) from {loc}: "
+                                 f"`{hook}` must be pure for "
+                                 f"event-skip parity")
+                if spec.get("no_reads"):
+                    for chain, attr, node in attr_loads(fi.node):
+                        if attr in _GRANT_STATE and _receiverish(chain):
+                            flag(node, "read",
+                                 f"grant state `{attr}` read from "
+                                 f"{loc}: intake runs before the "
+                                 f"tick's grant state settles — read "
+                                 f"it from pre_step onward")
+    findings.sort()
+    project._cache["dc601"] = findings
+    return findings
+
+
+def check_project(project: Project, tree: ast.AST, src_lines, rel):
+    for frel, line, col, msg in _analyze(project):
+        if frel == rel:
+            yield line, col, msg
+
+
+def check(tree: ast.AST, src_lines, rel):
+    """Single-file fallback: analyze this module as a one-file project."""
+    yield from check_project(Project({rel: tree}), tree, src_lines, rel)
